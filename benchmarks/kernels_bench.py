@@ -1,0 +1,40 @@
+"""Structural micro-bench of the Pallas kernels (interpret mode on CPU —
+not TPU timings; recorded so the perf-iteration log has a fixed harness)
+plus their jnp refs (which XLA compiles natively on CPU)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.window_join.ops import window_join_ref_op
+from repro.kernels.flash_attention.ops import attention_ref_op
+from repro.kernels.linear_scan.ops import linear_scan_ref_op
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, K, R, P = 128, 512, 16, 4
+    nt = np.sort(rng.integers(0, 1000, B)).astype(np.int32)
+    ns = rng.integers(0, 2, B).astype(np.int32)
+    npay = rng.uniform(0, 100, (B, P)).astype(np.float32)
+    stt = rng.integers(0, 900, (K, R)).astype(np.int32)
+    ss = rng.integers(0, 2, (K, R)).astype(np.int32)
+    sp = rng.uniform(0, 100, (K, R, P)).astype(np.float32)
+    us, _ = time_fn(lambda: window_join_ref_op(nt, ns, npay, stt, ss, sp,
+                                               ws=500))
+    comps = B * K * R
+    emit("kern_window_join_ref", us, f"{comps / us:.1f} comps/us")
+
+    q = rng.normal(0, 1, (8, 256, 64)).astype(np.float32)
+    k = rng.normal(0, 1, (8, 256, 64)).astype(np.float32)
+    us, _ = time_fn(lambda: attention_ref_op(q, k, k, causal=True))
+    emit("kern_attention_ref", us, "8x256x64")
+
+    r = rng.normal(0, 1, (4, 512, 32)).astype(np.float32)
+    w = rng.uniform(0.9, 0.99, (4, 512, 32)).astype(np.float32)
+    us, _ = time_fn(lambda: linear_scan_ref_op(r, r, r, w))
+    emit("kern_linear_scan_ref", us, "4x512x32")
+
+
+if __name__ == "__main__":
+    main()

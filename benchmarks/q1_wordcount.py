@@ -1,0 +1,75 @@
+"""Q1 (§8.1, Fig. 6): wordcount/paircount throughput+latency, VSN vs SN,
+across the paper's duplication levels (wordcount, pair L/M/H).
+
+VSN shares each tuple with all instances (no copies); SN expands each tuple
+per Corollary 1 (one copy per responsible instance).  We report tuples/s,
+per-tick latency, and the measured duplication factor — the paper's Fig. 6
+trend is VSN >= SN with the gap growing in the duplication level.
+"""
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.aggregate import count_aggregate, fast_init
+from repro.core.aggregate import tick_fast as agg_fast
+from repro.core.runtime import SNPipeline, VSNPipeline
+from repro.core.vsn import merge_fast_state
+from repro.core.windows import WindowSpec
+from repro.data import datagen
+
+K_VIRT = 256
+N_INST = 8
+TICK = 256
+WS = WindowSpec(wa=1000, ws=2000, wt="multi")   # 1s/2s windows (delta=ms)
+
+
+def fast_tick(op, st, ready, resp, explicit_w=None):
+    return agg_fast(op, "count", st, ready, resp)
+
+
+def run_case(mode: str, wc_mode: str, pair_dist: int, n_ticks: int = 12):
+    rng = np.random.default_rng(7)
+    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2)
+    cls = VSNPipeline if mode == "vsn" else SNPipeline
+    kw = dict(tick_fn=fast_tick)
+    if mode == "vsn":
+        kw["merge_fn"] = merge_fast_state
+        kw["init_sigma"] = lambda: fast_init(op.resolved())
+    pipe = cls(op, n_max=N_INST, n_active=N_INST, stash_cap=TICK, **kw)
+    if mode == "sn":
+        pipe.sigmas = jax.tree.map(
+            lambda a: jax.numpy.broadcast_to(a, (N_INST,) + a.shape),
+            fast_init(op.resolved()))
+    gen = datagen.tweets(rng, n_ticks=n_ticks, tick=TICK, words_per_tweet=6,
+                         vocab=5000, k_virt=K_VIRT, mode=wc_mode,
+                         pair_dist=pair_dist, rate_per_tick=50)
+    batches = list(gen)
+    pipe.step(batches[0])          # compile
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        pipe.step(b)
+    dt = time.perf_counter() - t0
+    tput = TICK * (n_ticks - 1) / dt
+    lat_us = dt / (n_ticks - 1) * 1e6
+    dup = (np.mean([d for d in pipe.duplication if d > 0])
+           if mode == "sn" else 1.0)
+    return tput, lat_us, dup
+
+
+def main():
+    for wc_mode, dist, label in [("wordcount", 0, "wordcount"),
+                                 ("paircount", 3, "pair_L"),
+                                 ("paircount", 10, "pair_M")]:
+        t_v, l_v, _ = run_case("vsn", wc_mode, dist)
+        t_s, l_s, dup = run_case("sn", wc_mode, dist)
+        emit(f"q1_{label}_vsn_tput_tps", 1e6 / t_v, f"{t_v:.0f} t/s")
+        emit(f"q1_{label}_sn_tput_tps", 1e6 / t_s, f"{t_s:.0f} t/s")
+        emit(f"q1_{label}_speedup", l_v,
+             f"vsn/sn={t_v / t_s:.2f}x dup={dup:.2f}")
+
+
+if __name__ == "__main__":
+    main()

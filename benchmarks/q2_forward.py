@@ -1,0 +1,56 @@
+"""Q2 (§8.2, Fig. 7): max throughput / min latency of the I=2 forwarding
+O+ (Operator 6) — the data sharing+sorting bound — for increasing Pi."""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import scalegate, tuples as T
+
+TICK = 512
+
+
+def run(n_inst: int, n_ticks: int = 20):
+    """Operator 6 forwards every tuple; its cost is ScaleGate merge + the
+    replicated read (VSN: every instance sees the whole ready batch)."""
+    rng = np.random.default_rng(0)
+    state = scalegate.init_scalegate(2, capacity=TICK, kmax=1,
+                                     payload_width=4)
+
+    @jax.jit
+    def step(state, batch):
+        state, ready = scalegate.push(state, batch)
+        # Operator 6 f_U: forward payload unchanged, per instance
+        outs = jnp.broadcast_to(ready.payload, (n_inst,) + ready.payload.shape)
+        return state, outs.sum()
+
+    tau = 0
+    batches = []
+    for _ in range(n_ticks):
+        taus = np.sort(tau + rng.integers(0, 50, TICK)).astype(np.int32)
+        tau = int(taus.max()) + 1
+        batches.append(T.make_batch(
+            jnp.asarray(taus), jnp.asarray(
+                rng.uniform(0, 1, (TICK, 4)).astype(np.float32)),
+            source=jnp.asarray(rng.integers(0, 2, TICK), jnp.int32)))
+    state, s = step(state, batches[0])
+    jax.block_until_ready(s)
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        state, s = step(state, b)
+    jax.block_until_ready(s)
+    dt = time.perf_counter() - t0
+    return TICK * (n_ticks - 1) / dt, dt / (n_ticks - 1) * 1e3
+
+
+def main():
+    for n in (1, 4, 16, 36):
+        tps, lat_ms = run(n)
+        emit(f"q2_forward_pi{n}", 1e6 / tps, f"{tps:.0f} t/s, {lat_ms:.2f} ms/tick")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Q4 (§8.4, Fig. 9): reconfiguration cost for provisioning/decommissioning.
+
+The paper's headline: < 40 ms even when provisioning tens of instances,
+because nothing is transferred.  We measure the *marginal* cost of a
+reconfiguring tick pair vs a plain tick pair (the switch rides inside the
+normal tick: control tuple -> gamma barrier -> table swap), plus the state
+bytes each scheme ships (VSN: 0; SN baseline: the re-owned sigma rows).
+"""
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit
+from repro.core.aggregate import count_aggregate, fast_init
+from repro.core.aggregate import tick_fast as agg_fast
+from repro.core.controller import Reconfiguration, active_mask, balanced_fmu
+from repro.core.runtime import SNPipeline, VSNPipeline
+from repro.core.vsn import merge_fast_state
+from repro.core.windows import WindowSpec
+from repro.data import datagen
+
+K_VIRT = 1000                      # ScaleJoin's virtual key count
+N_MAX = 64
+WS = WindowSpec(wa=1000, ws=5000, wt="multi")
+
+
+def fast_tick(op, st, ready, resp, explicit_w=None):
+    return agg_fast(op, "count", st, ready, resp)
+
+
+def run(pi_from: int, pi_to: int, cls):
+    rng = np.random.default_rng(1)
+    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=512, extra_slots=2)
+    kw = {}
+    if cls is VSNPipeline:
+        kw = dict(tick_fn=fast_tick, merge_fn=merge_fast_state,
+                  init_sigma=lambda: fast_init(op.resolved()))
+    pipe = cls(op, n_max=N_MAX, n_active=pi_from, stash_cap=128, **kw)
+    if cls is SNPipeline:
+        pipe.sigmas = jax.tree.map(
+            lambda a: jax.numpy.broadcast_to(a, (N_MAX,) + a.shape),
+            fast_init(op.resolved()))
+        pipe._tick = fast_tick
+        pipe._step = jax.jit(pipe._step_impl)
+    batches = list(datagen.tweets(rng, n_ticks=10, tick=128,
+                                  words_per_tweet=4, vocab=2000,
+                                  k_virt=K_VIRT, rate_per_tick=40))
+    rc0 = Reconfiguration(epoch=1, n_active=pi_to,
+                          fmu=balanced_fmu(K_VIRT, pi_to, N_MAX),
+                          active=active_mask(pi_to, N_MAX))
+    for b in batches[:3]:
+        pipe.step(b)
+    pipe.step(batches[3], reconfig=rc0)     # warm the reconfig path too
+    pipe.step(batches[4])
+    # plain pair
+    t0 = time.perf_counter()
+    pipe.step(batches[5]); pipe.step(batches[6])
+    t_plain = time.perf_counter() - t0
+    # reconfiguring pair
+    rc = Reconfiguration(epoch=2, n_active=pi_from,
+                         fmu=balanced_fmu(K_VIRT, pi_from, N_MAX),
+                         active=active_mask(pi_from, N_MAX))
+    t0 = time.perf_counter()
+    pipe.step(batches[7], reconfig=rc); pipe.step(batches[8])
+    t_rc = time.perf_counter() - t0
+    moved = getattr(pipe, "bytes_transferred", 0)
+    return max(t_rc - t_plain, 0.0) * 1e3, moved
+
+
+def main():
+    for pi_from, pi_to in [(1, 4), (8, 24), (18, 31), (30, 52), (52, 30)]:
+        m_v, _ = run(pi_from, pi_to, VSNPipeline)
+        m_s, moved = run(pi_from, pi_to, SNPipeline)
+        emit(f"q4_reconfig_{pi_from}to{pi_to}_vsn", m_v * 1e3,
+             f"marginal {m_v:.1f}ms, 0 state bytes")
+        emit(f"q4_reconfig_{pi_from}to{pi_to}_sn", m_s * 1e3,
+             f"marginal {m_s:.1f}ms, {moved} state bytes")
+
+
+if __name__ == "__main__":
+    main()

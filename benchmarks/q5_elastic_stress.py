@@ -1,0 +1,58 @@
+"""Q5 (§8.5, Fig. 11): stress reconfigurations under an abruptly-changing
+rate trace with the predictive controller; reports reconfig count, thread
+trace, sustained throughput, and that outputs stay correct (vs a static
+max-width run)."""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.conftest_shim import collect_outputs
+from repro.core.aggregate import count_aggregate
+from repro.core.controller import PredictiveController, Reconfiguration
+from repro.core.runtime import VSNPipeline
+from repro.core.windows import WindowSpec
+from repro.data import datagen
+
+K_VIRT = 256
+WS = WindowSpec(wa=500, ws=1000, wt="multi")
+
+
+def main():
+    rng = np.random.default_rng(5)
+    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2)
+    ctl = PredictiveController(n_max=32, k_virt=K_VIRT,
+                               comparisons_per_s_per_instance=3e6,
+                               ws_seconds=1.0, n_active=2)
+    pipe = VSNPipeline(op, n_max=32, n_active=2, stash_cap=256)
+    static = VSNPipeline(op, n_max=32, n_active=32, stash_cap=256)
+
+    phases = [500, 4000, 1500, 8000, 800, 6000]
+    trace, outs_e, outs_s = [], [], []
+    n_reconf = 0
+    t0 = time.perf_counter()
+    tick_id = 0
+    for rate in phases:
+        for b in datagen.tweets(rng, n_ticks=3, tick=256,
+                                words_per_tweet=3, vocab=1000,
+                                k_virt=K_VIRT, rate_per_tick=max(rate // 10, 1)):
+            rc = ctl.observe(rate)
+            if rc is not None:
+                n_reconf += 1
+            o1, o2, _ = pipe.step(b, reconfig=rc)
+            outs_e += collect_outputs(o1) + collect_outputs(o2)
+            o1, o2, _ = static.step(b)
+            outs_s += collect_outputs(o1) + collect_outputs(o2)
+            trace.append(ctl.n_active)
+            tick_id += 1
+    dt = time.perf_counter() - t0
+    ok = sorted(outs_e) == sorted(outs_s)
+    emit("q5_stress_reconfigs", dt / tick_id * 1e6,
+         f"{n_reconf} reconfigs, pi trace {min(trace)}..{max(trace)}, "
+         f"outputs_match_static={ok}")
+    assert ok, "elastic run diverged from static oracle"
+
+
+if __name__ == "__main__":
+    main()

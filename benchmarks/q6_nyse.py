@@ -1,0 +1,63 @@
+"""Q6 (§8.6, Fig. 13): NYSE-style hedge self-join under a bursty rate with
+threshold-controller elasticity; reports throughput, comparisons, reconfig
+count and thread range."""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.controller import ThresholdController
+from repro.core.join import fast_join_init, hedge_predicate
+from repro.core.join import tick_fast as join_fast
+from repro.core.vsn import merge_fast_state, run_tick
+from repro.core.windows import WindowSpec
+from repro.data import datagen
+
+K_VIRT = 256
+RING = 16
+WS = WindowSpec(wa=1, ws=30 * 1000, wt="single")   # 30 s window
+FJ = hedge_predicate()
+
+
+def main():
+    rng = np.random.default_rng(11)
+    ctl = ThresholdController(n_max=16, k_virt=K_VIRT,
+                              capacity_per_instance=2000.0, n_active=2)
+    st = fast_join_init(K_VIRT, RING, 2)
+    n_active = {"v": 2}
+
+    def tick_fn(op, s, r, resp, explicit_w=None):
+        return join_fast(WS, FJ, s, r, resp, out_cap=256, emit=False)
+
+    @jax.jit
+    def step(st, batch, fmu, active):
+        return run_tick(None, st, batch, fmu, active, tick_fn,
+                        merge_fast_state)
+
+    batches = list(datagen.nyse(rng, n_ticks=16, tick=128, k_virt=K_VIRT))
+    reconfigs, trace = 0, []
+    t0 = time.perf_counter()
+    matches = 0
+    for b in batches:
+        rate = float(rng.uniform(200, 8000))
+        rc = ctl.observe(rate)
+        if rc is not None:
+            reconfigs += 1
+        n = ctl.n_active
+        fmu = jnp.asarray(np.arange(K_VIRT) % n, jnp.int32)
+        active = jnp.asarray(np.arange(16) < n, bool)
+        st, outs = step(st, b, fmu, active)
+        trace.append(n)
+    jax.block_until_ready(st.comparisons)
+    dt = time.perf_counter() - t0
+    tput = 128 * len(batches) / dt
+    emit("q6_nyse_hedge", 1e6 / tput,
+         f"{tput:.0f} t/s, {float(st.comparisons):.2e} comps, "
+         f"{reconfigs} reconfigs, pi {min(trace)}..{max(trace)}")
+
+
+if __name__ == "__main__":
+    main()

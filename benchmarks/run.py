@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure (Q1-Q6) + kernels.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints ``name,us_per_call,
+derived`` CSV rows (plus the §Roofline pointer — the roofline table itself
+is produced by repro.launch.roofline against the dry-run artifacts).
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (kernels_bench, q1_wordcount, q2_forward,
+                            q3_scalejoin, q4_reconfig, q5_elastic_stress,
+                            q6_nyse)
+    ok = True
+    for mod in (q1_wordcount, q2_forward, q3_scalejoin, q4_reconfig,
+                q5_elastic_stress, q6_nyse, kernels_bench):
+        try:
+            mod.main()
+        except Exception:
+            ok = False
+            print(f"{mod.__name__},FAIL,", flush=True)
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Elasticity controllers (paper §8.4-§8.5).
+
+STRETCH "does not embed a specific policy ... but defines a generic API for
+external modules" (§3) — controllers are host-side Python that observe tick
+metrics and emit ``Reconfiguration`` requests (new Pi, f_mu, active set).
+
+* ``ThresholdController`` — §8.4: upper/target/lower CPU(load) thresholds
+  (0.90 / 0.70 / 0.45).  Provision the smallest number of new instances
+  bringing average load below target; decommission the largest number that
+  keeps it below target.
+* ``PredictiveController`` — §8.5 tightens the band to [0.70, 0.80] and
+  sizes against *pending + predicted* work using the stream-join cost model
+  of [22]: per-tuple cost grows linearly with the window population
+  (rate x WS), so required capacity ~ rate^2 * WS / throughput_per_instance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Reconfiguration:
+    epoch: int
+    n_active: int
+    fmu: np.ndarray       # i32[K]
+    active: np.ndarray    # bool[n_max]
+
+
+def balanced_fmu(k_virt: int, n_active: int, n_max: int) -> np.ndarray:
+    """Round-robin key -> instance map over the active prefix (hash(k) % Pi,
+    Operator 3 L4)."""
+    return (np.arange(k_virt) % max(n_active, 1)).astype(np.int32)
+
+
+def active_mask(n_active: int, n_max: int) -> np.ndarray:
+    m = np.zeros((n_max,), bool)
+    m[:n_active] = True
+    return m
+
+
+@dataclasses.dataclass
+class ThresholdController:
+    n_max: int
+    k_virt: int
+    capacity_per_instance: float          # tuples/s one instance sustains
+    upper: float = 0.90
+    target: float = 0.70
+    lower: float = 0.45
+    n_active: int = 1
+    epoch: int = 0
+
+    def observe(self, rate: float) -> Optional[Reconfiguration]:
+        load = rate / (self.n_active * self.capacity_per_instance)
+        desired = self.n_active
+        if load > self.upper:
+            # smallest provision bringing load below target (§8.4)
+            desired = int(np.ceil(rate / (self.target * self.capacity_per_instance)))
+        elif load < self.lower:
+            # largest decommission staying below target (§8.4)
+            desired = max(1, int(np.ceil(
+                rate / (self.target * self.capacity_per_instance))))
+        desired = min(self.n_max, max(1, desired))
+        if desired == self.n_active:
+            return None
+        self.n_active = desired
+        self.epoch += 1
+        return Reconfiguration(
+            epoch=self.epoch, n_active=desired,
+            fmu=balanced_fmu(self.k_virt, desired, self.n_max),
+            active=active_mask(desired, self.n_max))
+
+
+@dataclasses.dataclass
+class PredictiveController:
+    """§8.5: narrower [lower, upper] band + the [22] join cost model.
+
+    Join work per second ~ rate * (window population) = rate^2 * WS (+ the
+    pending backlog), so capacity planning uses the *predicted* comparisons
+    rather than the instantaneous CPU load.
+    """
+    n_max: int
+    k_virt: int
+    comparisons_per_s_per_instance: float
+    ws_seconds: float
+    lower: float = 0.70
+    upper: float = 0.80
+    n_active: int = 1
+    epoch: int = 0
+    backlog: float = 0.0
+
+    def observe(self, rate: float) -> Optional[Reconfiguration]:
+        work = rate * rate * self.ws_seconds + self.backlog   # comparisons/s
+        cap = self.n_active * self.comparisons_per_s_per_instance
+        load = work / max(cap, 1e-9)
+        desired = self.n_active
+        if load > self.upper or load < self.lower:
+            mid = 0.5 * (self.lower + self.upper)
+            desired = int(np.ceil(
+                work / (mid * self.comparisons_per_s_per_instance)))
+        desired = min(self.n_max, max(1, desired))
+        if desired == self.n_active:
+            return None
+        self.n_active = desired
+        self.epoch += 1
+        return Reconfiguration(
+            epoch=self.epoch, n_active=desired,
+            fmu=balanced_fmu(self.k_virt, desired, self.n_max),
+            active=active_mask(desired, self.n_max))

@@ -1,0 +1,147 @@
+"""Elastic reconfiguration — epochs, control tuples, the watermark barrier
+(paper §5 "From static to elastic setups", §7, Alg. 4 L13-21, Alg. 5-6).
+
+A reconfiguration is a new epoch ``e*`` with instance set ``O*`` and mapping
+``f_mu*``, delivered through a *control tuple* timestamped with the last
+forwarded event time per source (addSTRETCH, Alg. 5) so it never violates
+the TB's sorted-source contract.  The switch triggers when the watermark
+first exceeds ``gamma = t_ctrl.tau`` (Alg. 4 L17): every tuple with
+``tau <= gamma`` is processed under ``f_mu``, everything later under
+``f_mu*``.  In SPMD the "waitForInstances" barrier is the lockstep itself.
+
+State-transfer accounting (the paper's headline):
+  * VSN switch cost   = bytes of the tables swapped (4 * (K + n) + O(1));
+  * SN  switch cost   = bytes of sigma rows whose owner changed — the state
+    transfer StreamCloud/Flink-style elasticity must ship.  ``sn_transfer``
+    implements it (gather rows from old owners) so benchmarks can measure
+    both sides of Figure 9's story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tuples as T
+from repro.core import watermark as wm
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EpochState:
+    """Cond. 2 variables {e, e*, O, O*, f_mu*, gamma} (§5)."""
+    e: jax.Array            # i32[] current epoch id
+    fmu: jax.Array          # i32[K] current key -> instance map
+    active: jax.Array       # bool[n_max] current instance set O
+    e_next: jax.Array       # i32[] pending epoch id (== e when none)
+    fmu_next: jax.Array     # i32[K]
+    active_next: jax.Array  # bool[n_max]
+    gamma: jax.Array        # i32[] trigger event time (INF when none)
+    reconfigs: jax.Array    # i32[] completed reconfigurations (metric)
+
+
+def init_epoch(fmu: jax.Array, active: jax.Array) -> EpochState:
+    return EpochState(
+        e=jnp.zeros((), jnp.int32), fmu=fmu, active=active,
+        e_next=jnp.zeros((), jnp.int32), fmu_next=fmu, active_next=active,
+        gamma=jnp.full((), wm.INF_TIME, jnp.int32),
+        reconfigs=jnp.zeros((), jnp.int32))
+
+
+def make_control_tuple(last_tau, epoch_id: int, kmax: int,
+                       payload_width: int) -> T.TupleBatch:
+    """addSTRETCH (Alg. 5): a control tuple carrying the reconfiguration id,
+    timestamped with the last forwarded tau so per-source sort order holds.
+    The new tables travel out-of-band (replicated arrays), mirroring the
+    paper's metadata-borne ``O*, f_mu*``."""
+    b = T.empty_batch(1, kmax, payload_width)
+    return dataclasses.replace(
+        b,
+        tau=jnp.asarray([last_tau], jnp.int32),
+        valid=jnp.ones((1,), bool),
+        is_control=jnp.ones((1,), bool),
+        ctrl_epoch=jnp.asarray([epoch_id], jnp.int32))
+
+
+def prepare_reconfig(st: EpochState, batch: T.TupleBatch,
+                     fmu_new: jax.Array, active_new: jax.Array) -> EpochState:
+    """prepareReconfig (Alg. 6): adopt the *latest* control tuple whose epoch
+    id exceeds the operator's (Theorem 4: latest wins, same for all)."""
+    is_ctrl = batch.is_control & batch.valid
+    newest = jnp.max(jnp.where(is_ctrl, batch.ctrl_epoch, -1))
+    gamma_c = jnp.max(jnp.where(is_ctrl & (batch.ctrl_epoch == newest),
+                                batch.tau, -1))
+    take = newest > st.e
+    return dataclasses.replace(
+        st,
+        e_next=jnp.where(take, newest, st.e_next),
+        fmu_next=jnp.where(take, fmu_new, st.fmu_next),
+        active_next=jnp.where(take, active_new, st.active_next),
+        gamma=jnp.where(take, gamma_c, st.gamma))
+
+
+def split_epoch_masks(st: EpochState, batch: T.TupleBatch):
+    """Partition a tick at gamma (Alg. 4 L17): lanes with tau <= gamma run
+    under f_mu, later lanes under f_mu* (the ready batch is tau-sorted, so
+    this preserves processing order)."""
+    data = batch.valid & ~batch.is_control
+    pre = data & (batch.tau <= st.gamma)
+    post = data & (batch.tau > st.gamma)
+    return pre, post
+
+
+def advance_epoch(st: EpochState, w_end) -> Tuple[EpochState, jax.Array]:
+    """Commit the pending epoch once the watermark has passed gamma (the
+    barrier: in SPMD every instance evaluates this identically).  Returns
+    (state, switched?)."""
+    switch = (st.e_next > st.e) & (w_end > st.gamma)
+    new = EpochState(
+        e=jnp.where(switch, st.e_next, st.e),
+        fmu=jnp.where(switch, st.fmu_next, st.fmu),
+        active=jnp.where(switch, st.active_next, st.active),
+        e_next=st.e_next,
+        fmu_next=st.fmu_next,
+        active_next=st.active_next,
+        gamma=jnp.where(switch, wm.INF_TIME, st.gamma),
+        reconfigs=st.reconfigs + switch.astype(jnp.int32),
+    )
+    return new, switch
+
+
+def vsn_switch_bytes(st: EpochState) -> int:
+    """Bytes touched by a VSN reconfiguration: the tables only."""
+    return int(st.fmu.size * 4 + st.active.size + 12)
+
+
+def sn_transfer(states_j: Any, fmu_old: jax.Array, fmu_new: jax.Array):
+    """The SN baseline's state transfer: ship every key row whose owner
+    changed from its old instance to its new one (serialization /
+    deserialization of §1).  Returns (new states, bytes moved)."""
+    moved = fmu_old != fmu_new
+
+    k_virt = fmu_old.shape[0]
+
+    def reship(leaf):
+        # leaf: [n_inst, K, ...]; new_leaf[j, k] = leaf[fmu_old[k], k] if
+        # fmu_new[k] == j (row fetched from old owner), else leaf[j, k].
+        # Per-instance scalars (watermark/next_l bookkeeping) are not keyed
+        # state and stay put.
+        if leaf.ndim < 2 or leaf.shape[1] != k_virt:
+            return leaf
+        k_ids = jnp.arange(leaf.shape[1])
+        from_old = leaf[fmu_old, k_ids]                  # [K, ...]
+        n_inst = leaf.shape[0]
+        take = (fmu_new[None, :] == jnp.arange(n_inst)[:, None]) & moved[None, :]
+        take = take.reshape(take.shape + (1,) * (leaf.ndim - 2))
+        return jnp.where(take, from_old[None], leaf)
+
+    new_states = jax.tree.map(reship, states_j)
+    row_bytes = sum(
+        int(jnp.dtype(l.dtype).itemsize * l.size / (l.shape[0] * l.shape[1]))
+        for l in jax.tree.leaves(states_j)
+        if l.ndim >= 2 and l.shape[1] == k_virt)
+    moved_rows = jnp.sum(moved.astype(jnp.int32))
+    return new_states, (moved_rows * row_bytes).astype(jnp.int32)

@@ -1,0 +1,204 @@
+"""Pipeline driver: ScaleGate -> epoch handling -> executor tick (§7, Fig. 5).
+
+``setup(O+, m, n)``: a pipeline is created with ``n_max`` instances of which
+``n_active`` are connected (the rest are the paper's pool: active=False,
+zero responsible keys, negligible work).  Each ``step``:
+
+  1. (optional) a ``Reconfiguration`` from a controller is encapsulated in
+     per-source control tuples stamped with the last forwarded tau
+     (addSTRETCH, Alg. 5) and pushed with the data;
+  2. ScaleGate merges and gates ready tuples (shared TB);
+  3. prepareReconfig adopts pending tables (Alg. 6);
+  4. the tick is processed in two epoch phases split at gamma (Alg. 4 L17):
+     the tau-sorted prefix <= gamma under f_mu, the rest under f_mu*;
+  5. outputs from all instances feed the downstream TB (Lemma 2/3 make the
+     concatenation a valid sorted source set).
+
+``VSNPipeline`` shares sigma (the paper); ``SNPipeline`` keeps dedicated
+sigma_j and pays duplication + state transfer — the measured baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elastic, scalegate, sn, tuples as T, vsn
+from repro.core import watermark as wm
+from repro.core.controller import Reconfiguration
+from repro.core.operator import OperatorDef, tick as general_tick
+
+
+@dataclasses.dataclass
+class VSNPipeline:
+    op: OperatorDef
+    n_max: int
+    n_active: int
+    stash_cap: int = 256
+    tick_fn: Callable = None
+    merge_fn: Callable = None
+    init_sigma: Callable = None
+
+    def __post_init__(self):
+        self.op = self.op.resolved()
+        k = self.op.k_virt
+        fmu = jnp.asarray(np.arange(k) % self.n_active, jnp.int32)
+        active = jnp.asarray(
+            np.arange(self.n_max) < self.n_active, bool)
+        self.epoch = elastic.init_epoch(fmu, active)
+        self.sigma = (self.init_sigma or self.op.init_state)()
+        self.sg = scalegate.init_scalegate(
+            self.op.n_inputs, self.stash_cap, 1,
+            self.op.payload_out if False else 1)  # placeholder, reset below
+        self._tick = self.tick_fn or general_tick
+        self._merge = self.merge_fn or vsn.merge_states
+        self._sg_ready = False
+        self._step = jax.jit(self._step_impl)
+
+    def _ensure_gate(self, incoming: T.TupleBatch):
+        if not self._sg_ready:
+            self.sg = scalegate.init_scalegate(
+                self.op.n_inputs, self.stash_cap, incoming.kmax,
+                incoming.payload_width)
+            self._sg_ready = True
+
+    def _step_impl(self, sg, epoch, sigma, incoming, fmu_new, active_new):
+        sg, ready = scalegate.push(sg, incoming)
+        epoch = elastic.prepare_reconfig(epoch, ready, fmu_new, active_new)
+        pre, post = elastic.split_epoch_masks(epoch, ready)
+
+        ready_pre = dataclasses.replace(ready, valid=pre | (ready.is_control & ready.valid))
+        sigma, outs1 = vsn.run_tick(self.op, sigma, ready_pre, epoch.fmu,
+                                    epoch.active, self._tick, self._merge)
+
+        live = ready.valid & ~ready.is_control
+        w_end = jnp.max(jnp.where(live, ready.tau, 0))
+        epoch, switched = elastic.advance_epoch(epoch, w_end)
+
+        ready_post = dataclasses.replace(ready, valid=post)
+        sigma, outs2 = vsn.run_tick(self.op, sigma, ready_post, epoch.fmu,
+                                    epoch.active, self._tick, self._merge)
+        return sg, epoch, sigma, outs1, outs2, switched
+
+    def step(self, incoming: T.TupleBatch,
+             reconfig: Optional[Reconfiguration] = None):
+        """Push one tick; returns (outputs_pre, outputs_post, switched)."""
+        self._ensure_gate(incoming)
+        if reconfig is not None:
+            ctrl = elastic.make_control_tuple(
+                int(np.asarray(self.sg.wmark.frontier).max()),
+                reconfig.epoch, incoming.kmax, incoming.payload_width)
+            # one control tuple per source so every per-source stream stays
+            # sorted (Alg. 5); stamped with that source's last tau.
+            ctrls = []
+            for i in range(self.op.n_inputs):
+                tau_i = int(np.asarray(self.sg.wmark.frontier)[i])
+                c = dataclasses.replace(
+                    ctrl, tau=jnp.asarray([tau_i], jnp.int32),
+                    source=jnp.asarray([i], jnp.int32))
+                ctrls.append(c)
+            incoming = functools.reduce(T.concat, ctrls, incoming)
+            fmu_new = jnp.asarray(reconfig.fmu)
+            active_new = jnp.asarray(reconfig.active)
+        else:
+            pad = T.empty_batch(self.op.n_inputs, incoming.kmax,
+                                incoming.payload_width)
+            incoming = T.concat(incoming, pad)
+            fmu_new = self.epoch.fmu
+            active_new = self.epoch.active
+        (self.sg, self.epoch, self.sigma, outs1, outs2,
+         switched) = self._step(self.sg, self.epoch, self.sigma, incoming,
+                                fmu_new, active_new)
+        return outs1, outs2, switched
+
+
+@dataclasses.dataclass
+class SNPipeline:
+    """The shared-nothing baseline: dedicated sigma_j, duplication at
+    forward, state transfer at reconfiguration."""
+    op: OperatorDef
+    n_max: int
+    n_active: int
+    stash_cap: int = 256
+    tick_fn: Callable = None
+
+    def __post_init__(self):
+        self.op = self.op.resolved()
+        k = self.op.k_virt
+        fmu = jnp.asarray(np.arange(k) % self.n_active, jnp.int32)
+        active = jnp.asarray(np.arange(self.n_max) < self.n_active, bool)
+        self.epoch = elastic.init_epoch(fmu, active)
+        self.sigmas = sn.init_states(self.op, self.n_max)
+        self._tick = self.tick_fn or general_tick
+        self._sg_ready = False
+        self.bytes_transferred = 0
+        self.duplication = []
+        self._step = jax.jit(self._step_impl)
+
+    def _ensure_gate(self, incoming: T.TupleBatch):
+        if not self._sg_ready:
+            self.sg = scalegate.init_scalegate(
+                self.op.n_inputs, self.stash_cap, incoming.kmax,
+                incoming.payload_width)
+            self._sg_ready = True
+
+    def _step_impl(self, sg, epoch, sigmas, incoming, fmu_new, active_new):
+        sg, ready = scalegate.push(sg, incoming)
+        epoch = elastic.prepare_reconfig(epoch, ready, fmu_new, active_new)
+        pre, post = elastic.split_epoch_masks(epoch, ready)
+
+        dup = sn.duplication_factor(
+            dataclasses.replace(ready, valid=pre), epoch.fmu, epoch.active)
+        ready_pre = dataclasses.replace(
+            ready, valid=pre | (ready.is_control & ready.valid))
+        sigmas, outs1 = sn.run_tick(self.op, sigmas, ready_pre, epoch.fmu,
+                                    epoch.active, self._tick)
+
+        live = ready.valid & ~ready.is_control
+        w_end = jnp.max(jnp.where(live, ready.tau, 0))
+        fmu_old = epoch.fmu
+        epoch, switched = elastic.advance_epoch(epoch, w_end)
+        # SN pays the state transfer when ownership changes (§2.5):
+        sigmas, moved_bytes = jax.lax.cond(
+            switched,
+            lambda s: elastic.sn_transfer(s, fmu_old, epoch.fmu),
+            lambda s: (s, jnp.zeros((), jnp.int32)),
+            sigmas)
+
+        ready_post = dataclasses.replace(ready, valid=post)
+        sigmas, outs2 = sn.run_tick(self.op, sigmas, ready_post, epoch.fmu,
+                                    epoch.active, self._tick)
+        return sg, epoch, sigmas, outs1, outs2, switched, dup, moved_bytes
+
+    def step(self, incoming: T.TupleBatch,
+             reconfig: Optional[Reconfiguration] = None):
+        self._ensure_gate(incoming)
+        if reconfig is not None:
+            ctrls = []
+            for i in range(self.op.n_inputs):
+                tau_i = int(np.asarray(self.sg.wmark.frontier)[i])
+                c = elastic.make_control_tuple(
+                    tau_i, reconfig.epoch, incoming.kmax,
+                    incoming.payload_width)
+                c = dataclasses.replace(c, source=jnp.asarray([i], jnp.int32))
+                ctrls.append(c)
+            incoming = functools.reduce(T.concat, ctrls, incoming)
+            fmu_new = jnp.asarray(reconfig.fmu)
+            active_new = jnp.asarray(reconfig.active)
+        else:
+            pad = T.empty_batch(self.op.n_inputs, incoming.kmax,
+                                incoming.payload_width)
+            incoming = T.concat(incoming, pad)
+            fmu_new = self.epoch.fmu
+            active_new = self.epoch.active
+        (self.sg, self.epoch, self.sigmas, outs1, outs2, switched, dup,
+         moved) = self._step(self.sg, self.epoch, self.sigmas, incoming,
+                             fmu_new, active_new)
+        self.duplication.append(float(dup))
+        self.bytes_transferred += int(moved)
+        return outs1, outs2, switched

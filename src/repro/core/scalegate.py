@@ -1,0 +1,115 @@
+"""ScaleGate / Elastic ScaleGate as a batched JAX merge (paper §2.4, §6).
+
+The original ScaleGate is a lock-free skip list merging timestamp-sorted
+source streams into one totally-ordered stream of *ready* tuples
+(Definition 3), delivered to every reader.  On an SPMD TPU the
+synchronization problem dissolves — the total order is a property of the
+merged batch itself, which every instance observes identically (DESIGN.md
+§2).  What we keep is ScaleGate's *semantics*, as a pure function:
+
+    push(state, incoming) -> (state', ready_batch)
+
+* tuples from each source arrive timestamp-sorted;
+* the watermark is ``W = min_i max_m tau_i^m`` over active sources;
+* the ready batch is totally ordered by ``(tau, source, arrival)`` and
+  contains exactly the tuples with ``tau <= W`` not yet delivered;
+* non-ready tuples wait in a fixed-capacity stash (TPU state is static —
+  overflow is counted and surfaced, never silent).
+
+The Elastic ScaleGate (ESG) extensions map to:
+* ``addSources``/``removeSources``  -> watermark frontier add/flush
+  (Lemma 3 safe lower bound / "flush tuple" of §6);
+* ``addReaders``/``removeReaders``  -> the *reader* set is the executor's
+  active-instance mask — every reader sees the same ready batch by
+  construction, so reader membership is handled downstream (vsn.py).
+
+``repro/kernels/scalegate_merge`` is the Pallas realization of the same
+merge for the intra-chip (true shared-memory) domain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tuples as T
+from repro.core import watermark as wm
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScaleGateState:
+    stash: T.TupleBatch          # fixed-capacity not-yet-ready tuples
+    wmark: wm.WatermarkState     # per-source frontiers (Definition 3)
+    overflow: jax.Array          # i32 count of tuples dropped on stash overflow
+
+    @property
+    def capacity(self) -> int:
+        return self.stash.batch
+
+
+def init_scalegate(n_sources: int, capacity: int, kmax: int,
+                   payload_width: int) -> ScaleGateState:
+    return ScaleGateState(
+        stash=T.empty_batch(capacity, kmax, payload_width),
+        wmark=wm.init_watermark(n_sources),
+        overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def _stable_order(tau: jax.Array, source: jax.Array, valid: jax.Array) -> jax.Array:
+    """Deterministic total order: valid first, then (tau, source, arrival)."""
+    n = tau.shape[0]
+    # two stable passes => lexicographic (tau, source); arrival order breaks
+    # remaining ties because argsort is stable.
+    order1 = jnp.argsort(source, stable=True)
+    tau1 = jnp.where(valid, tau, wm.INF_TIME)[order1]
+    order2 = jnp.argsort(tau1, stable=True)
+    return order1[order2]
+
+
+def push(state: ScaleGateState, incoming: T.TupleBatch
+         ) -> Tuple[ScaleGateState, T.TupleBatch]:
+    """Merge a tick of per-source tuples; emit the ready prefix.
+
+    The emitted batch has static size ``capacity + incoming.batch`` with a
+    validity mask selecting the ready tuples (sorted, exactly-once).
+    """
+    cap = state.capacity
+    combined = T.concat(state.stash, incoming)
+
+    # addTuple: fold the new arrivals into the per-source frontiers.
+    wstate = wm.observe(state.wmark, incoming.source, incoming.tau, incoming.valid)
+    w = wstate.value()
+
+    order = _stable_order(combined.tau, combined.source, combined.valid)
+    merged = T.take(combined, order)
+
+    ready = merged.valid & (merged.tau <= w)
+    out = dataclasses.replace(merged, valid=ready)
+
+    # Stash = the non-ready survivors, compacted to the front of the buffer.
+    keep = merged.valid & ~ready
+    # order: kept lanes first (stable, so timestamp order is preserved).
+    keep_order = jnp.argsort(~keep, stable=True)
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    lanes = jnp.arange(cap)
+    stash = T.take(merged, keep_order[:cap], fill_invalid=lanes >= n_keep)
+    dropped = jnp.maximum(n_keep - cap, 0)
+
+    new_state = ScaleGateState(
+        stash=stash, wmark=wstate, overflow=state.overflow + dropped)
+    return new_state, out
+
+
+def add_sources(state: ScaleGateState, mask: jax.Array, gamma) -> ScaleGateState:
+    """ESG addSources — Lemma 3: start the new frontier at gamma."""
+    return dataclasses.replace(state, wmark=wm.add_sources(state.wmark, mask, gamma))
+
+
+def remove_sources(state: ScaleGateState, mask: jax.Array) -> ScaleGateState:
+    """ESG removeSources — flush semantics of §6."""
+    return dataclasses.replace(state, wmark=wm.remove_sources(state.wmark, mask))

@@ -1,0 +1,79 @@
+"""Shared-Nothing execution (paper §2.2, Alg. 1-2) — the baseline.
+
+forwardSN (Alg. 1): each tuple is *copied* to every downstream instance
+responsible for at least one of its keys — this is the data duplication of
+Theorem 1 (duplication factor = mean distinct responsible instances per
+tuple).  processSN (Alg. 2): each instance keeps a dedicated state
+``sigma_j`` (no sharing), so elastic reconfigurations additionally require
+*state transfer* (§2.5) — implemented in elastic.py as the measured baseline.
+
+On a mesh this is the all-to-all dispatch pattern; on the reference host
+executor the duplication shows up as per-instance valid masks over the same
+lane layout (tuples are not compacted — lane b is "queued at instance j"
+iff ``route[b, j]``), which keeps the executor shape-static while preserving
+queue semantics and per-instance arrival order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tuples as T
+from repro.core.operator import OperatorDef, OpState, tick
+from repro.core.vsn import responsibility
+
+
+def route_matrix(batch: T.TupleBatch, fmu: jax.Array, active: jax.Array
+                 ) -> jax.Array:
+    """forwardSN routing: route[b, j] = instance j receives a copy of tuple b
+    (Alg. 1 L5-7: at least one of t's keys maps to j)."""
+    n_inst = active.shape[0]
+    key_ok = batch.keys >= 0                                  # [B, KMAX]
+    dest = fmu[jnp.clip(batch.keys, 0, fmu.shape[0] - 1)]     # [B, KMAX]
+    onehot = (dest[..., None] == jnp.arange(n_inst)) & key_ok[..., None]
+    route = jnp.any(onehot, axis=1)                           # [B, n_inst]
+    # control tuples reach every instance (Alg. 5 fans them out per queue)
+    route = route | batch.is_control[:, None]
+    return route & batch.valid[:, None] & active[None, :]
+
+
+def duplication_factor(batch: T.TupleBatch, fmu: jax.Array,
+                       active: jax.Array) -> jax.Array:
+    """Copies sent per input tuple (1.0 = no duplication)."""
+    route = route_matrix(batch, fmu, active)
+    sent = jnp.sum(route.astype(jnp.float32))
+    n = jnp.maximum(jnp.sum(batch.valid.astype(jnp.float32)), 1.0)
+    return sent / n
+
+
+def run_tick(op: OperatorDef, states_j, ready: T.TupleBatch,
+             fmu: jax.Array, active: jax.Array,
+             tick_fn: Callable = tick):
+    """One SN tick: route copies, then each instance processes its queue
+    against its *dedicated* state (leading [n_inst] axis on ``states_j``).
+
+    SN instances only see the tuples routed to them, so their implicit
+    watermarks stall on dry queues (§2.3); like Flink, the tick's end
+    watermark is *explicitly* broadcast to every instance."""
+    route = route_matrix(ready, fmu, active)
+    live = ready.valid & ~ready.is_control
+    w_end = jnp.max(jnp.where(live, ready.tau, 0))
+
+    def per_instance(j, state_j):
+        queued = dataclasses.replace(ready, valid=route[:, j])
+        resp = responsibility(fmu, j, active)
+        return tick_fn(op, state_j, queued, resp, explicit_w=w_end)
+
+    n_inst = active.shape[0]
+    return jax.vmap(per_instance)(jnp.arange(n_inst), states_j)
+
+
+def init_states(op: OperatorDef, n_inst: int):
+    """Dedicated per-instance states: sigma_j stacked on a leading axis."""
+    one = op.init_state()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_inst,) + a.shape),
+                        one)

@@ -1,0 +1,123 @@
+"""Tuple batches — the unit of data in the STRETCH runtime.
+
+The paper processes one tuple at a time; a TPU runtime processes *batches* of
+tuples per tick.  A ``TupleBatch`` is a structure-of-arrays view of ``B``
+tuples ``<tau, ..., [phi[1], phi[2], ...]>`` (paper §2.1):
+
+  * ``tau``     — event time in integer ``delta`` ticks (delta = 1 ms, as Flink).
+  * ``keys``    — the *multi-key set* ``f_MK(t)`` (Definition 4), fixed width
+                  ``KMAX`` with ``-1`` padding.  A single-key operator uses
+                  ``KMAX == 1`` (``f_SK``, §2.1).
+  * ``payload`` — dense float payload ``phi`` (schema flattened by the config).
+  * ``source``  — index of the upstream physical stream (``0..I-1``).
+  * ``valid``   — batch-lane occupancy (ticks are fixed-size; short ticks pad).
+  * ``is_control`` / ``ctrl_epoch`` — the control-tuple lane used by the
+                  elasticity protocol (§7, Alg. 5-6).  Control tuples are never
+                  processed as data (``isControl``, Alg. 4 L13).
+
+All fields are JAX arrays so a batch can live sharded on a mesh; the batch is
+a registered pytree and can flow through jit/shard_map/scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NO_KEY = -1  # padding value inside the multi-key set
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TupleBatch:
+    tau: jax.Array          # i32[B]
+    keys: jax.Array         # i32[B, KMAX]
+    payload: jax.Array      # f32[B, P]
+    source: jax.Array       # i32[B]
+    valid: jax.Array        # bool[B]
+    is_control: jax.Array   # bool[B]
+    ctrl_epoch: jax.Array   # i32[B]
+
+    @property
+    def batch(self) -> int:
+        return self.tau.shape[0]
+
+    @property
+    def kmax(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def payload_width(self) -> int:
+        return self.payload.shape[1]
+
+    def num_valid(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+def make_batch(
+    tau,
+    payload,
+    keys=None,
+    source=None,
+    valid=None,
+    is_control=None,
+    ctrl_epoch=None,
+    kmax: int = 1,
+) -> TupleBatch:
+    """Build a TupleBatch from plain arrays, filling defaults."""
+    tau = jnp.asarray(tau, jnp.int32)
+    b = tau.shape[0]
+    payload = jnp.asarray(payload, jnp.float32)
+    if payload.ndim == 1:
+        payload = payload[:, None]
+    if keys is None:
+        keys = jnp.full((b, kmax), NO_KEY, jnp.int32)
+    else:
+        keys = jnp.asarray(keys, jnp.int32)
+        if keys.ndim == 1:
+            keys = keys[:, None]
+    if source is None:
+        source = jnp.zeros((b,), jnp.int32)
+    else:
+        source = jnp.asarray(source, jnp.int32)
+    if valid is None:
+        valid = jnp.ones((b,), bool)
+    else:
+        valid = jnp.asarray(valid, bool)
+    if is_control is None:
+        is_control = jnp.zeros((b,), bool)
+    else:
+        is_control = jnp.asarray(is_control, bool)
+    if ctrl_epoch is None:
+        ctrl_epoch = jnp.zeros((b,), jnp.int32)
+    else:
+        ctrl_epoch = jnp.asarray(ctrl_epoch, jnp.int32)
+    return TupleBatch(tau=tau, keys=keys, payload=payload, source=source,
+                      valid=valid, is_control=is_control, ctrl_epoch=ctrl_epoch)
+
+
+def empty_batch(b: int, kmax: int, payload_width: int) -> TupleBatch:
+    return TupleBatch(
+        tau=jnp.zeros((b,), jnp.int32),
+        keys=jnp.full((b, kmax), NO_KEY, jnp.int32),
+        payload=jnp.zeros((b, payload_width), jnp.float32),
+        source=jnp.zeros((b,), jnp.int32),
+        valid=jnp.zeros((b,), bool),
+        is_control=jnp.zeros((b,), bool),
+        ctrl_epoch=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def concat(a: TupleBatch, b: TupleBatch) -> TupleBatch:
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
+def take(batch: TupleBatch, idx: jax.Array, fill_invalid: Optional[jax.Array] = None) -> TupleBatch:
+    """Gather lanes ``idx``; lanes where ``fill_invalid`` is True are invalidated."""
+    out = jax.tree.map(lambda x: x[idx], batch)
+    if fill_invalid is not None:
+        out = dataclasses.replace(out, valid=out.valid & ~fill_invalid)
+    return out

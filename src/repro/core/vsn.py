@@ -1,0 +1,156 @@
+"""VSN execution (paper §5, Alg. 3-4): shared Tuple Buffer, shared state.
+
+Every instance consumes the *same* totally-ordered ready batch (the
+all-gathered ScaleGate output — our shared TB), and processes exactly the
+virtual keys it is responsible for under the current epoch's ``f_mu``
+(Alg. 4 L23 / Alg. 2 L26).  No tuple is ever duplicated (Observation 2) and
+state never moves at reconfiguration (Theorem 3): each key row of the shared
+``sigma`` is written by exactly one instance per epoch, so the merged state
+is simply "row k comes from instance f_mu(k)".
+
+Two realizations:
+
+* ``run_tick`` — single-host reference used by tests/benchmarks: ``vmap``
+  over instances against the shared state, then the disjoint-writer merge.
+  On one device the vmapped instances literally share memory — the paper's
+  own setting.
+* ``shard_tick`` — mesh execution: ``sigma`` rows are sharded over the
+  instance axis (fixed layout), the ready batch is replicated by an
+  all-gather, and each shard masks in its rows; the merge is a no-op by
+  construction.  Used by the streaming launcher and the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tuples as T
+from repro.core.operator import OperatorDef, OpState, Outputs, tick
+
+
+def responsibility(fmu: jax.Array, j, active: jax.Array) -> jax.Array:
+    """resp[k] = (f_mu(k) == j) for an active instance, else empty."""
+    return (fmu == j) & active[j]
+
+
+def merge_states(stacked: OpState, fmu: jax.Array) -> OpState:
+    """Disjoint-writer merge: row k of sigma comes from instance f_mu(k).
+
+    Scalars (watermark, next_l) advance identically on all instances —
+    TB delivers the same watermarks to all readers (Definition 6) — so any
+    reduction that picks a consistent value works; we take the max to also
+    tolerate inactive instances that skipped the tick.
+    """
+    def pick_rows(leaf):
+        # leaf: [n_inst, K, ...] -> [K, ...]
+        return leaf[fmu, jnp.arange(leaf.shape[1])]
+
+    zeta = jax.tree.map(pick_rows, stacked.zeta)
+    occupied = pick_rows(stacked.occupied)
+    return OpState(zeta=zeta, occupied=occupied,
+                   next_l=jnp.max(stacked.next_l),
+                   watermark=jnp.max(stacked.watermark))
+
+
+def merge_fast_state(stacked, fmu: jax.Array):
+    """Disjoint-writer merge for the fast-path states (FastAggState /
+    FastJoinState): leaves with a leading [n_inst, K, ...] key axis are
+    row-picked by f_mu; global counters take max (identical on writers) and
+    per-instance metrics (collisions/comparisons) sum."""
+    from repro.core.aggregate import FastAggState
+    from repro.core.join import FastJoinState
+
+    if isinstance(stacked, FastAggState):
+        return FastAggState(
+            op_state=merge_states(stacked.op_state, fmu),
+            slot_l=jnp.max(stacked.slot_l, axis=0),
+            collisions=jnp.sum(stacked.collisions))
+    if isinstance(stacked, FastJoinState):
+        rows = jnp.arange(stacked.tau.shape[1])
+        return FastJoinState(
+            tau=stacked.tau[fmu, rows], pay=stacked.pay[fmu, rows],
+            stream=stacked.stream[fmu, rows], n=stacked.n[fmu, rows],
+            c=jnp.max(stacked.c),
+            comparisons=jnp.sum(stacked.comparisons))
+    raise TypeError(type(stacked))
+
+
+def run_tick(op: OperatorDef, state, ready: T.TupleBatch,
+             fmu: jax.Array, active: jax.Array,
+             tick_fn: Callable = tick,
+             merge_fn: Callable = merge_states):
+    """One VSN tick over all instances against shared state.
+
+    ``tick_fn(op, state, ready, resp) -> (state, outs)`` defaults to the
+    general O+ path; the fast paths (aggregate/join) plug in with their
+    matching ``merge_fn`` since they obey the same responsibility contract.
+    """
+    n_inst = active.shape[0]
+
+    def per_instance(j):
+        resp = responsibility(fmu, j, active)
+        return tick_fn(op, state, ready, resp, explicit_w=None)
+
+    stacked_state, stacked_outs = jax.vmap(per_instance)(jnp.arange(n_inst))
+    merged = merge_fn(stacked_state, fmu)
+    return merged, stacked_outs  # outputs stay per-instance (readers merge)
+
+
+def flatten_outputs(stacked: Outputs) -> Outputs:
+    """Merge per-instance output buffers into one (downstream TB ingest).
+
+    Ordered by (tau, instance): within an instance outputs are already
+    timestamp-sorted (Lemma 2), so a stable sort by tau yields the global
+    order the downstream ScaleGate expects.
+    """
+    tau = stacked.tau.reshape(-1)
+    payload = stacked.payload.reshape(-1, stacked.payload.shape[-1])
+    valid = stacked.valid.reshape(-1)
+    order = jnp.argsort(jnp.where(valid, tau, jnp.iinfo(jnp.int32).max),
+                        stable=True)
+    return Outputs(tau=tau[order], payload=payload[order], valid=valid[order],
+                   count=jnp.sum(stacked.count),
+                   overflow=jnp.sum(stacked.overflow))
+
+
+def shard_tick(op: OperatorDef, mesh, axis: str):
+    """Build the mesh VSN tick: state sharded over ``axis`` by key blocks,
+    ready batch replicated (the all-gather *is* the shared TB: every shard
+    observes the identical total order — DESIGN.md §2).
+
+    Returns a function with the same signature as ``run_tick`` minus the
+    merge (rows are disjoint by layout).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax import shard_map
+
+    n_shards = mesh.shape[axis]
+    assert op.k_virt % n_shards == 0
+    rows_per = op.k_virt // n_shards
+
+    def local_tick(state, ready, fmu, active, shard_id):
+        # local rows are [shard_id*rows_per, ...); fmu remaps *work*, and
+        # work for remapped keys writes back via the owner-computes rule.
+        lo = shard_id * rows_per
+        resp_local = jnp.ones((rows_per,), bool) & active[shard_id]
+        del fmu  # owner-computes: storage layout == responsibility
+        return tick(op, state, ready, resp_local)
+
+    def sharded(state, ready, fmu, active):
+        def body(state, ready, fmu, active):
+            j = jax.lax.axis_index(axis)
+            return local_tick(state, ready, fmu, active, j)
+
+        spec_state = jax.tree.map(lambda _: P(axis), state)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(spec_state, P(), P(), P()),
+            out_specs=(spec_state, P(axis)),
+            check_vma=False,
+        )(state, ready, fmu, active)
+
+    return sharded

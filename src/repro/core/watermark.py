@@ -1,0 +1,76 @@
+"""Watermark tracking (paper §2.3, Definitions 2-3).
+
+Two modes, both supported:
+
+* **implicit** — every physical input stream is timestamp-sorted; the
+  watermark of a merge point is ``min_i max_m tau_i^m`` (Definition 3), i.e.
+  the minimum over sources of the latest timestamp seen from that source.
+  Implicit watermarks additionally establish a *total order* on the merged
+  stream, enabling order-sensitive analysis (ScaleJoin).
+* **explicit** — sources periodically emit watermark values (carried here as
+  tuple metadata); the merge point keeps the latest per source and takes the
+  min.
+
+Both reduce to the same state: ``per_source_frontier[i]`` plus
+``W = min_i frontier[i]``.  Sources that are *removed* (ESG
+``removeSources``) are flushed by setting their frontier to ``+inf`` so they
+never hold the watermark back (§6 "Removing existing sources"); sources that
+are *added* start at the safe lower bound ``gamma`` of Lemma 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+INF_TIME = jnp.iinfo(jnp.int32).max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WatermarkState:
+    frontier: jax.Array      # i32[n_sources] latest tau (or explicit wm) per source
+    active: jax.Array        # bool[n_sources] source membership (ESG sources set)
+
+    @property
+    def n_sources(self) -> int:
+        return self.frontier.shape[0]
+
+    def value(self) -> jax.Array:
+        """W = min over *active* sources of their frontier (Definition 3)."""
+        eff = jnp.where(self.active, self.frontier, INF_TIME)
+        return jnp.min(eff)
+
+
+def init_watermark(n_sources: int, active=None) -> WatermarkState:
+    if active is None:
+        active = jnp.ones((n_sources,), bool)
+    return WatermarkState(
+        frontier=jnp.zeros((n_sources,), jnp.int32),
+        active=jnp.asarray(active, bool),
+    )
+
+
+def observe(state: WatermarkState, source: jax.Array, tau: jax.Array,
+            valid: jax.Array) -> WatermarkState:
+    """Fold a batch of (source, tau) observations into the frontier.
+
+    Frontiers only move forward (watermarks are non-decreasing, §2.3).
+    """
+    upd = jnp.where(valid, tau, -1)
+    new_frontier = state.frontier.at[source].max(upd, mode="drop")
+    return dataclasses.replace(state, frontier=new_frontier)
+
+
+def add_sources(state: WatermarkState, mask: jax.Array, gamma) -> WatermarkState:
+    """ESG ``addSources``: new sources start at the Lemma-3 safe bound gamma."""
+    frontier = jnp.where(mask & ~state.active,
+                         jnp.asarray(gamma, jnp.int32), state.frontier)
+    return WatermarkState(frontier=frontier, active=state.active | mask)
+
+
+def remove_sources(state: WatermarkState, mask: jax.Array) -> WatermarkState:
+    """ESG ``removeSources``: flush — the leaving source stops gating W."""
+    return dataclasses.replace(state, active=state.active & ~mask)

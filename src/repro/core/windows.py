@@ -1,0 +1,73 @@
+"""Time-based sliding-window arithmetic (paper §2.1).
+
+Windows cover ``[l*WA, l*WA + WS)`` for ``l`` in Z.  A tuple with event time
+``tau`` falls into window indices ``l`` with
+
+    l_max = floor(tau / WA)                 (``latestWinL``  / Alg. 2 L10)
+    l_min = floor((tau - WS) / WA) + 1      (``earliestWinL`` / Alg. 2 L9)
+
+so each tuple touches at most ``n_slots = ceil(WS / WA)`` window instances.
+``WT = multi`` keeps all ``n_slots`` live instances per key in a ring buffer
+(slot of window ``l`` is ``l % n_slots``); ``WT = single`` keeps one instance
+per key that *slides* via ``f_S`` (§2.1, Fig. 1).
+
+A window instance ``w = <zeta, l, k>`` is *expired* when its right boundary
+``l*WA + WS <= W`` (Definition 2 discussion) — at that point ``f_O`` may fire
+and the slot may be shifted/recycled, and output tuples take ``tau = right
+boundary`` (Observation 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+SINGLE = "single"
+MULTI = "multi"
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    wa: int          # window advance (delta ticks)
+    ws: int          # window size    (delta ticks)
+    wt: str = MULTI  # window type: "single" | "multi"
+
+    def __post_init__(self):
+        if self.wa <= 0 or self.ws <= 0:
+            raise ValueError("WA and WS must be positive")
+        if self.wt not in (SINGLE, MULTI):
+            raise ValueError(f"bad window type {self.wt!r}")
+
+    @property
+    def n_slots(self) -> int:
+        """Number of concurrently-live window instances per key."""
+        if self.wt == SINGLE:
+            return 1
+        return -(-self.ws // self.wa)  # ceil
+
+    def latest_win_l(self, tau):
+        """Left boundary index of the latest window containing ``tau``."""
+        return jnp.floor_divide(tau, self.wa)
+
+    def earliest_win_l(self, tau):
+        """Left boundary index of the earliest window containing ``tau``."""
+        return jnp.floor_divide(tau - self.ws, self.wa) + 1
+
+    def window_indices(self, tau):
+        """(l_min, l_max) inclusive window-index range for event time tau."""
+        return self.earliest_win_l(tau), self.latest_win_l(tau)
+
+    def slot_of(self, l):
+        """Ring-buffer slot of window index ``l``."""
+        return jnp.mod(l, self.n_slots)
+
+    def left_of(self, l):
+        return l * self.wa
+
+    def right_of(self, l):
+        return l * self.wa + self.ws
+
+    def expired(self, l, watermark):
+        """Window ``l`` is expired once no future tuple can fall in it."""
+        return self.right_of(l) <= watermark

@@ -1,0 +1,33 @@
+"""Jitted public entry points for the flash_attention kernel (incl. GQA)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _gqa_expand(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "blk_q", "blk_k", "interpret", "n_rep"))
+def flash_attention_op(q, k, v, *, causal=True, window=None, n_rep=1,
+                       blk_q=128, blk_k=128, interpret=True):
+    """q: [BH_q, Sq, D]; k, v: [BH_kv, Skv, D] with BH_q = BH_kv * n_rep."""
+    k = _gqa_expand(k, n_rep)
+    v = _gqa_expand(v, n_rep)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "n_rep"))
+def attention_ref_op(q, k, v, *, causal=True, window=None, n_rep=1):
+    k = _gqa_expand(k, n_rep)
+    v = _gqa_expand(v, n_rep)
+    return attention_ref(q, k, v, causal=causal, window=window)

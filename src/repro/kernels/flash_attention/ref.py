@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: [BH, Sq, D]; k, v: [BH, Skv, D].  Decode convention: the Sq query
+    positions sit at the *end* of the KV timeline."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    scale = d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: chunked linear-recurrence scan (rwkv6 / SSM decode).
+
+The matrix-state recurrence shared by RWKV6 ("Finch", data-dependent decay)
+and Mamba-style SSD heads:
+
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t          S: [Dk, Dv]
+    o_t = r_t @ (S_{t-1} + diag(u) @ (k_t^T v_t))  (u = bonus; None for SSM)
+
+Grid (BH, T/C): the time axis is innermost and *sequential*; the state S
+persists in VMEM scratch across chunk steps (the same cross-grid-step
+scratch discipline as flash attention's running softmax).  Within a chunk
+the recurrence is an unrolled fori over C steps of rank-1 updates — the
+chunk lives entirely in VMEM (C=128, D=64 f32: 32 KB per tensor).
+
+This is the TPU adaptation of the GPU "chunked parallel scan": the
+inter-chunk dependency is irreducibly sequential; the intra-chunk work is
+what the VPU parallelizes (vectorized over Dk x Dv).  A matmul
+(intra-chunk-attention) formulation is a further MXU optimization recorded
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(chunk, use_bonus, r_ref, k_ref, v_ref, w_ref, u_ref, o_ref,
+            state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0]        # [C, Dk]
+    k = k_ref[0]        # [C, Dk]
+    v = v_ref[0]        # [C, Dv]
+    w = w_ref[0]        # [C, Dk] decay in (0, 1)
+    u = u_ref[0]        # [1, Dk] bonus (rwkv6) — zeros for plain SSM
+
+    def step(t, carry):
+        s, out = carry
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)       # [1, Dk]
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)       # [1, Dv]
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)       # [1, Dk]
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)       # [1, Dk]
+        kv = kt.T @ vt                                      # [Dk, Dv]
+        if use_bonus:
+            att = s + u.T * kv
+        else:
+            att = s
+        ot = rt @ att                                       # [1, Dv]
+        s = wt.T * s + kv
+        out = jax.lax.dynamic_update_slice_in_dim(out, ot, t, 0)
+        return s, out
+
+    s0 = state_ref[...]
+    out0 = jnp.zeros_like(o_ref[0])
+    s, out = jax.lax.fori_loop(0, chunk, step, (s0, out0))
+    state_ref[...] = s
+    o_ref[0] = out
+
+
+def linear_scan(r, k, v, w, u=None, *, chunk: int = 64,
+                interpret: bool = False):
+    """r/k/w: [BH, T, Dk]; v: [BH, T, Dv]; u: [BH, Dk] or None."""
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    use_bonus = u is not None
+    if u is None:
+        u = jnp.zeros((bh, dk), r.dtype)
+    u = u[:, None, :]  # [BH, 1, Dk]
+    grid = (bh, t // chunk)
+
+    kern = functools.partial(_kernel, chunk, use_bonus)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,16 @@
+"""Jitted public entry points for the linear_scan kernel."""
+
+import functools
+
+import jax
+
+from repro.kernels.linear_scan.linear_scan import linear_scan
+from repro.kernels.linear_scan.ref import linear_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linear_scan_op(r, k, v, w, u=None, *, chunk=64, interpret=True):
+    return linear_scan(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+linear_scan_ref_op = jax.jit(linear_scan_ref)

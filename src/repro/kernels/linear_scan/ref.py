@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the linear_scan kernel (lax.scan over time)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(r, k, v, w, u=None):
+    """r/k/w: [BH, T, Dk]; v: [BH, T, Dv]; u: [BH, Dk] or None."""
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    use_bonus = u is not None
+    if u is None:
+        u = jnp.zeros((bh, dk), r.dtype)
+
+    def one(r, k, v, w, u):
+        def step(s, xs):
+            rt, kt, vt, wt = xs
+            kv = jnp.outer(kt, vt)
+            att = s + u[:, None] * kv if use_bonus else s
+            ot = rt @ att
+            s = wt[:, None] * s + kv
+            return s, ot
+        s0 = jnp.zeros((dk, dv), jnp.float32)
+        _, out = jax.lax.scan(step, s0, (r, k, v, w))
+        return out
+
+    return jax.vmap(one)(r, k, v, w, u).astype(r.dtype)

@@ -1,0 +1,18 @@
+"""Jitted public entry points for the scalegate_merge kernel."""
+
+import functools
+
+import jax
+
+from repro.kernels.scalegate_merge.ref import scalegate_merge_ref
+from repro.kernels.scalegate_merge.scalegate_merge import scalegate_merge
+
+
+@functools.partial(jax.jit, static_argnames=("n_sources", "interpret"))
+def scalegate_merge_op(tau, src, valid, *, n_sources, interpret=True):
+    return scalegate_merge(tau, src, valid, n_sources=n_sources,
+                           interpret=interpret)
+
+
+scalegate_merge_ref_op = jax.jit(
+    scalegate_merge_ref, static_argnames=("n_sources",))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the scalegate_merge kernel."""
+
+import jax.numpy as jnp
+
+from repro.core.watermark import INF_TIME
+
+
+def scalegate_merge_ref(tau, src, valid, *, n_sources: int):
+    n = tau.shape[0]
+    lane = jnp.arange(n)
+    src_onehot = (src[None, :] == jnp.arange(n_sources)[:, None]) & valid[None]
+    per_src_max = jnp.max(jnp.where(src_onehot, tau[None, :], -1), axis=1)
+    w = jnp.min(per_src_max)
+    sort_tau = jnp.where(valid, tau, INF_TIME)
+    order = jnp.argsort(sort_tau, stable=True).astype(jnp.int32)
+    ready = (valid[order] & (tau[order] <= w)).astype(jnp.int32)
+    return order, ready, w[None]

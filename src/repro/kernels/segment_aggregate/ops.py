@@ -1,0 +1,18 @@
+"""Jitted public entry points for the segment_aggregate kernel."""
+
+import functools
+
+import jax
+
+from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
+from repro.kernels.segment_aggregate.segment_aggregate import segment_aggregate
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k", "interpret"))
+def segment_aggregate_op(keys, slots, vals, acc, *, tile_k=128,
+                         interpret=True):
+    return segment_aggregate(keys, slots, vals, acc, tile_k=tile_k,
+                             interpret=interpret)
+
+
+segment_aggregate_ref_op = jax.jit(segment_aggregate_ref)

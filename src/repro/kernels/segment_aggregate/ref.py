@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the segment_aggregate kernel."""
+
+import jax.numpy as jnp
+
+
+def segment_aggregate_ref(keys, slots, vals, acc):
+    k = acc.shape[0]
+    ok = keys >= 0
+    safe_k = jnp.clip(keys, 0, k - 1)
+    upd = jnp.where(ok[:, None], vals, 0.0)
+    return acc.at[safe_k, slots].add(upd, mode="drop")

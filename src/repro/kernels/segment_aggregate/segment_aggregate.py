@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: keyed windowed segment-reduce (paper Q1 hot loop).
+
+The wordcount/paircount update phase: N (tuple-hit, key, slot) records are
+reduced into the [K, S, W] window-state accumulator.  Intra-chip VSN again:
+the hit records live once in HBM (the shared tuple block); the grid programs
+each own a contiguous tile of virtual-key rows and *scan the whole block*,
+accumulating only the records whose key falls in their tile — the
+shared-read/disjoint-write discipline of Theorem 3, with zero scatter
+conflicts by construction (a scatter-free formulation: the gather+mask turns
+the random scatter into dense VPU selects, which is the TPU-native shape of
+the paper's per-key f_R loop).
+
+Shapes
+  keys   i32[N]      virtual key per hit (-1 = dead lane)
+  slots  i32[N]      window slot per hit
+  vals   f32[N, W]   contribution (1.0 for counts)
+  acc    f32[K, S, W]  accumulator (donated/read-modify-write)
+out
+  acc'   f32[K, S, W]
+
+Tiling: grid over K tiles; per step VMEM holds the (N,W) block + a
+(TK, S, W) accumulator tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(n_slots, tile_k, keys_ref, slots_ref, vals_ref, acc_ref, out_ref):
+    i = pl.program_id(0)
+    keys = keys_ref[...]                  # [N]
+    slots = slots_ref[...]                # [N]
+    vals = vals_ref[...]                  # [N, W]
+    lo = i * tile_k
+
+    local = keys - lo                     # key row within this tile
+    in_tile = (local >= 0) & (local < tile_k) & (keys >= 0)
+
+    # dense one-hot accumulate: [N, TK*S] contributions -> sum over N.
+    # (TK*S is lane-dim friendly; the matmul form feeds the MXU.)
+    flat_idx = local * n_slots + slots
+    onehot = (flat_idx[:, None] == jnp.arange(tile_k * n_slots)[None, :])
+    onehot = jnp.where(in_tile[:, None], onehot, False)
+    contrib = jnp.dot(onehot.astype(vals.dtype).T, vals,
+                      preferred_element_type=jnp.float32)  # [TK*S, W]
+    out_ref[...] = acc_ref[...] + contrib.reshape(acc_ref.shape)
+
+
+def segment_aggregate(keys, slots, vals, acc, *, tile_k: int = 128,
+                      interpret: bool = False):
+    n, w = vals.shape
+    k, s, w2 = acc.shape
+    assert w == w2
+    tile_k = min(tile_k, k)
+    assert k % tile_k == 0
+    grid = (k // tile_k,)
+
+    kern = functools.partial(_kernel, s, tile_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),          # shared hit block
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, w), lambda i: (0, 0)),
+            pl.BlockSpec((tile_k, s, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_k, s, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, s, w), acc.dtype),
+        interpret=interpret,
+    )(keys, slots, vals, acc)

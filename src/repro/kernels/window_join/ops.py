@@ -1,0 +1,26 @@
+"""Jitted public entry points for the window_join kernel."""
+
+import functools
+
+import jax
+
+from repro.kernels.window_join.ref import window_join_ref
+from repro.kernels.window_join.window_join import window_join
+
+
+@functools.partial(jax.jit, static_argnames=("ws", "band", "n_attrs",
+                                             "tile_k", "interpret"))
+def window_join_op(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+                   ws, band=10.0, n_attrs=2, tile_k=128, interpret=True):
+    counts, comps = window_join(
+        new_tau, new_src, new_pay, st_tau, st_src, st_pay,
+        ws=ws, band=band, n_attrs=n_attrs, tile_k=tile_k,
+        interpret=interpret)
+    return counts, comps.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("ws", "band", "n_attrs"))
+def window_join_ref_op(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+                       ws, band=10.0, n_attrs=2):
+    return window_join_ref(new_tau, new_src, new_pay, st_tau, st_src, st_pay,
+                           ws=ws, band=band, n_attrs=n_attrs)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the window_join kernel."""
+
+import jax.numpy as jnp
+
+
+def window_join_ref(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+                    ws: int, band: float = 10.0, n_attrs: int = 2):
+    fresh = st_tau[None] + ws >= new_tau[:, None, None]
+    live = (st_tau[None] >= 0) & fresh
+    opp = live & (st_src[None] != new_src[:, None, None])
+    d = jnp.abs(new_pay[:, None, None, :n_attrs] - st_pay[None, :, :, :n_attrs])
+    hit = opp & jnp.all(d <= band, axis=-1)
+    counts = jnp.sum(hit.astype(jnp.int32), axis=-1)
+    comps = jnp.sum(opp.astype(jnp.int32))
+    return counts, comps

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: ScaleJoin blocked window band-join (paper Q3-Q6 hot loop).
+
+Intra-chip VSN, literally (DESIGN.md §2): the incoming tuple block lives
+once in HBM and is read by *every* grid program — the shared Tuple Buffer.
+Each program owns a tile of virtual-key rows of the stored-tuple ring (its
+``f_mu`` share, via the BlockSpec index map) and compares the whole incoming
+block against its tile: no tuple duplication, disjoint state, deterministic.
+
+Shapes
+  new_tau  i32[B]            incoming event times (timestamp-sorted tick)
+  new_src  i32[B]            stream ids (0 = L, 1 = R)
+  new_pay  f32[B, P]         payloads
+  st_tau   i32[K, R]         stored ring event times (-1 = empty)
+  st_src   i32[K, R]
+  st_pay   f32[K, R, P]
+outputs
+  counts   i32[B, K]         matches of incoming b against key row k
+  comps    i32[K_tiles, 1]   live comparisons per tile (roofline accounting)
+
+Band predicate (the [13]/[21] benchmark): matches iff
+``|newL.phi[a] - newR.phi[a]| <= band`` for a < n_attrs, with stream and
+``tau_new - tau_stored <= WS`` freshness (purge-on-read).
+
+Tiling: grid over K tiles; per step the program holds (B,P) + (TK,R,P) in
+VMEM.  With B=256, TK=128, R=64, P=2 (f32): 2 KB + 64 KB blocks — far under
+the ~16 MB VMEM budget, MXU-aligned lane dims via padding to 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ws, band, n_attrs,
+            new_tau_ref, new_src_ref, new_pay_ref,
+            st_tau_ref, st_src_ref, st_pay_ref,
+            counts_ref, comps_ref):
+    new_tau = new_tau_ref[...]            # [B]
+    new_src = new_src_ref[...]            # [B]
+    new_pay = new_pay_ref[...]            # [B, P]
+    st_tau = st_tau_ref[...]              # [TK, R]
+    st_src = st_src_ref[...]              # [TK, R]
+    st_pay = st_pay_ref[...]              # [TK, R, P]
+
+    # freshness + stream predicates: [B, TK, R]
+    fresh = st_tau[None] + ws >= new_tau[:, None, None]
+    live = (st_tau[None] >= 0) & fresh
+    opp = live & (st_src[None] != new_src[:, None, None])
+
+    # band predicate on the first n_attrs payload attributes
+    ok = jnp.ones_like(opp)
+    for a in range(n_attrs):
+        d = new_pay[:, None, None, a] - st_pay[None, :, :, a]
+        ok = ok & (jnp.abs(d) <= band)
+
+    hit = opp & ok
+    counts_ref[...] = jnp.sum(hit.astype(jnp.int32), axis=-1)
+    comps_ref[0, 0] = jnp.sum(opp.astype(jnp.int32))
+
+
+def window_join(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+                ws: int, band: float = 10.0, n_attrs: int = 2,
+                tile_k: int = 128, interpret: bool = False):
+    b, p = new_pay.shape
+    k, r = st_tau.shape
+    tile_k = min(tile_k, k)
+    assert k % tile_k == 0
+    grid = (k // tile_k,)
+
+    kern = functools.partial(_kernel, ws, band, n_attrs)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            # the shared tuple block: every program maps the same HBM block
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b, p), lambda i: (0, 0)),
+            # the program's key-row tile (its f_mu share)
+            pl.BlockSpec((tile_k, r), lambda i: (i, 0)),
+            pl.BlockSpec((tile_k, r), lambda i: (i, 0)),
+            pl.BlockSpec((tile_k, r, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, tile_k), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(new_tau, new_src, new_pay, st_tau, st_src, st_pay)

@@ -1,0 +1,16 @@
+"""Production meshes (never built at import: jax device state stays cold)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over local devices for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

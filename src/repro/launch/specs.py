@@ -1,0 +1,176 @@
+"""Sharding rules per architecture + parameter PartitionSpec trees.
+
+The logical->mesh rules adapt to the arch (DESIGN.md §6): attention heads
+shard over "model" only when the KV head count divides the TP degree
+(musicgen, deepseek-moe); otherwise head axes stay unconstrained for
+compute (XLA propagates) and the *KV cache timeline* carries the model
+axis ("kv_seq") so decode state fits memory with only scalar-sized softmax
+collectives (attention.decode_attention).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import DEFAULT_RULES
+
+
+def make_rules(cfg: ModelConfig, tp: int = 16) -> dict:
+    rules = dict(DEFAULT_RULES)
+    heads_ok = cfg.n_heads and cfg.n_kv_heads % tp == 0 \
+        and cfg.n_heads % tp == 0
+    if heads_ok:
+        rules["heads"] = "model"
+        rules["kv_heads"] = "model"
+        rules["head_dim"] = None
+        rules["kv_seq"] = None
+    else:
+        rules["heads"] = None
+        rules["kv_heads"] = None
+        rules["head_dim"] = None
+        rules["kv_seq"] = "model"       # decode cache: shard the timeline
+    return rules
+
+
+def _layer_specs(cfg: ModelConfig, prefix=()):
+    """PartitionSpec tree matching init_layer's dict structure."""
+    pre = prefix
+
+    def p(*axes):
+        return P(*(pre + axes))
+
+    d: dict = {"norm1": p(None), "norm2": p(None)}
+    if cfg.kind == "rwkv":
+        d["tm"] = {
+            "mu_r": p(None), "mu_k": p(None), "mu_v": p(None),
+            "mu_w": p(None), "mu_g": p(None),
+            "w_r": p(None, "model"), "w_k": p(None, "model"),
+            "w_v": p(None, "model"), "w_g": p(None, "model"),
+            "w_o": p("model", None),
+            "w0": p(None), "w_lora_a": p(None, None),
+            "w_lora_b": p(None, None), "u": p(None), "ln_scale": p(None),
+        }
+        d["cm"] = {
+            "mu_k": p(None), "mu_r": p(None),
+            "w_k": p(None, "model"), "w_v": p("model", None),
+            "w_r": p(None, "model"),
+        }
+        return d
+    d["attn"] = {
+        "wq": p(None, "model"), "wk": p(None, "model"),
+        "wv": p(None, "model"), "wo": p("model", None),
+    }
+    if cfg.qk_norm:
+        d["attn"]["q_scale"] = p(None)
+        d["attn"]["k_scale"] = p(None)
+    if cfg.kind == "hybrid":
+        d["norm1b"] = p(None)
+        d["ssm"] = {
+            "w_x": p(None, "model"), "w_z": p(None, "model"),
+            "w_b": p(None, "model"), "w_c": p(None, "model"),
+            "w_dt": p(None, None), "w_out": p("model", None),
+            "a_log": p(None),
+        }
+    if cfg.kind == "moe":
+        d["moe"] = {
+            "router": p(None, None),
+            "wg": p("model", None, None), "wu": p("model", None, None),
+            "wd": p("model", None, None),
+        }
+        if cfg.moe.n_shared:
+            d["moe"]["shared_wg"] = p(None, "model")
+            d["moe"]["shared_wu"] = p(None, "model")
+            d["moe"]["shared_wd"] = p("model", None)
+    else:
+        d["mlp"] = {"wg": p(None, "model"), "wu": p(None, "model"),
+                    "wd": p("model", None)}
+    return d
+
+
+def param_specs(cfg: ModelConfig):
+    specs = {
+        "embedding": P("model", None),     # vocab-sharded
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P("model", None)
+    prefix = (None,) if cfg.scan_layers else ()
+    layer = _layer_specs(cfg, prefix)
+    if cfg.scan_layers:
+        specs["layers"] = layer
+    else:
+        specs["layers"] = [layer for _ in range(cfg.n_layers)]
+    return specs
+
+
+def opt_specs(abstract_params, pspecs, data_size: int = 16,
+              dp_axes=("data",)):
+    """ZeRO-1: each f32 moment additionally shards over the data axis on the
+    first dim that is (a) unsharded in the param spec and (b) divisible by
+    the DP degree.  GSPMD then emits the ZeRO-1 gather/scatter pair around
+    the optimizer update (measured in the dry-run collectives)."""
+    import jax
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def zero1(shape_struct, spec: P):
+        shape = shape_struct.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, ax) in enumerate(zip(shape, entries)):
+            if ax is None and dim % data_size == 0 and dim >= data_size:
+                entries[i] = dp
+                break
+        return P(*entries)
+
+    return jax.tree.map(zero1, abstract_params, pspecs)
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that don't exist or don't divide the dim (batch=1
+    decode, odd vocab, pod axis on a single-pod mesh, ...)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 1 and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def fit_tree(specs, abstract, mesh):
+    import jax
+    return jax.tree.map(
+        lambda sp, ab: fit_spec(sp, ab.shape, mesh), specs, abstract,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(cfg: ModelConfig, rules: dict):
+    """KV caches [L, B, S, KV, Dh] / recurrent states."""
+    dp = rules["batch"]
+    if cfg.kind == "rwkv":
+        state = rules["state"]
+        return None, {
+            "shift_tm": P(None, dp, None),
+            "shift_cm": P(None, dp, None),
+            "wkv": P(None, dp, state, None, None),
+        }
+    kv_seq = rules["kv_seq"]
+    kv_heads = rules["kv_heads"]
+    caches = {"k": P(None, dp, kv_seq, kv_heads, None),
+              "v": P(None, dp, kv_seq, kv_heads, None)}
+    states = None
+    if cfg.kind == "hybrid":
+        states = P(None, dp, None, None, None)
+    return caches, states

@@ -1,0 +1,175 @@
+"""GQA attention: blocked online-softmax (jnp flash), qk-norm, sliding
+window, KV cache.  ``kernels/flash_attention`` is the Pallas twin for real
+TPU runs; this XLA path is what the dry-run lowers (DESIGN.md §4) and its
+FLOPs/bytes match the kernel's, so the roofline terms are representative.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm, rope
+from repro.models.sharding import axis_resolves, shard
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": init_dense(ks[0], (d, cfg.q_dim), dtype=dtype),
+        "wk": init_dense(ks[1], (d, cfg.kv_dim), dtype=dtype),
+        "wv": init_dense(ks[2], (d, cfg.kv_dim), dtype=dtype),
+        "wo": init_dense(ks[3], (cfg.q_dim, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((cfg.head_dim,), dtype)
+        p["k_scale"] = jnp.zeros((cfg.head_dim,), dtype)
+    return p
+
+
+def blocked_attention(q, k, v, *, q_offset, window: Optional[int] = None,
+                      chunk: int = 1024, unroll: bool = False):
+    """Causal flash attention in jnp: scan over KV chunks, online softmax.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Skv, KV, Dh] (GQA: H = KV * G).
+    ``q_offset``: absolute position of q[0] on the KV timeline (decode: Skv-1
+    for single-token, prefill/train: 0).  Never materializes [Sq, Skv].
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0
+    qg = q.reshape(b, sq, kv, g, dh)
+    scale = dh ** -0.5
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, c0 = inputs                      # [B, C, KV, Dh], offset
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kc).astype(jnp.float32)
+        s = s * scale
+        k_pos = c0 + jnp.arange(chunk)
+        mask = q_pos[:, None] >= k_pos[None, :]              # causal
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        upd = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vc.dtype), vc)
+        acc_new = acc * corr[..., 0][..., None] + upd.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    n_chunks = skv // chunk
+    kcs = k.reshape(b, n_chunks, chunk, kv, dh).swapaxes(0, 1)
+    vcs = v.reshape(b, n_chunks, chunk, kv, dh).swapaxes(0, 1)
+    offs = jnp.arange(n_chunks) * chunk
+    m0 = jnp.full((b, sq, kv, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, g, 1), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, g, dh), jnp.float32)
+    if unroll:
+        # analysis mode: a python loop makes every chunk visible to
+        # cost_analysis (scan bodies are counted once by XLA)
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            xc = jax.tree.map(lambda a: a[i], (kcs, vcs, offs))
+            carry, _ = step(carry, xc)
+        m, l, acc = carry
+    else:
+        # checkpoint per KV chunk: backward recomputes the chunk's logits
+        # instead of saving them (flash-backward memory discipline).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                      (kcs, vcs, offs))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, q_offset, window=None):
+    """Single-query attention with full (but tiny: Sq=1) logits.
+
+    The GSPMD-friendly decode path: with the KV cache sharded over the
+    sequence axis ("kv_seq" -> model), the QK^T einsum is local per shard,
+    softmax reduces with scalar-sized all-reduces, and the PV contraction
+    ends in one [B,H,Dh] psum — a few KB of collective per step instead of
+    broadcasting cache chunks (DESIGN.md §6).
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh)
+    scale = dh ** -0.5
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attn_forward(p, x, positions, cfg: ModelConfig, *,
+                 window: Optional[int] = None, cache=None,
+                 chunk: int = 1024):
+    """x: [B, S, D].  With ``cache`` (decode): append S new positions to the
+    cache at ``positions`` and attend over the full timeline."""
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if axis_resolves("heads"):
+        # heads divide TP: pin the clean head-parallel layout.  Otherwise
+        # leave q/k/v to GSPMD propagation — pinning P(dp, None, ...) would
+        # force an all-gather of the projection outputs (§Perf A3).
+        q = shard(q, "batch", "seq", "heads", "head_dim")
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]
+        pos0 = positions[0]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos0, 1)
+        if axis_resolves("kv_seq") or axis_resolves("kv_heads"):
+            ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+            cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        cache = {"k": ck, "v": cv}
+        if s == 1:
+            out = decode_attention(q, ck, cv, q_offset=pos0, window=window)
+        else:
+            out = blocked_attention(q, ck, cv, q_offset=pos0, window=window,
+                                    chunk=chunk, unroll=cfg.analysis_unroll)
+    else:
+        if axis_resolves("kv_heads"):
+            k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+            v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+        out = blocked_attention(q, k, v, q_offset=0, window=window,
+                                chunk=min(chunk, s),
+                                unroll=cfg.analysis_unroll)
+    out = out.reshape(b, s, cfg.q_dim)
+    out = jnp.einsum("bsq,qd->bsd", out, p["wo"])
+    return shard(out, "batch", "seq", "embed"), cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,138 @@
+"""Public step functions: train_step / prefill_step / decode_step.
+
+These are what the launcher jits and the dry-run lowers.  All three take
+the *same* pytrees on every arch (params, batch, caches) so the 40
+(arch x shape) dry-run cells share one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+from repro.optim import adamw
+
+
+def make_train_batch_shapes(cfg: ModelConfig, global_batch: int, seq: int):
+    if cfg.frontend == "token":
+        inputs = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((global_batch, seq, cfg.d_model),
+                                      jnp.bfloat16)
+    return {
+        "inputs": inputs,
+        "labels": jax.ShapeDtypeStruct((global_batch, seq), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((global_batch, seq), jnp.float32),
+    }
+
+
+def train_step(params, opt_state, batch: Dict[str, Any], *,
+               cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+               chunk: int = 1024):
+    """Forward/backward (+ microbatch grad accumulation) + AdamW update."""
+    inputs, labels, mask = batch["inputs"], batch["labels"], batch["mask"]
+    b, s = labels.shape
+    positions = jnp.arange(s)
+    m = cfg.n_microbatches
+
+    def loss_one(p, inp, lab, msk):
+        loss, aux = transformer.loss_fn(p, cfg, inp, lab, msk, positions,
+                                        chunk=chunk)
+        return loss, aux
+
+    if m == 1:
+        (loss, aux), grads = jax.value_and_grad(loss_one, has_aux=True)(
+            params, inputs, labels, mask)
+    else:
+        assert b % m == 0
+        mb = b // m
+        resh = lambda x: x.reshape((m, mb) + x.shape[1:])
+        micro = jax.tree.map(resh, (inputs, labels, mask))
+
+        def acc_body(carry, xs):
+            g_acc, l_acc, a_acc = carry
+            inp, lab, msk = xs
+            (l, a), g = jax.value_and_grad(loss_one, has_aux=True)(
+                params, inp, lab, msk)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + l, a_acc + a), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (grads, loss, aux), _ = jax.tree.map(lambda x: x, jax.lax.scan(
+            acc_body, (zeros, jnp.zeros(()), jnp.zeros(())), micro))
+        grads = jax.tree.map(lambda g: g / m, grads)
+        loss = loss / m
+
+    # §Perf A2: the cross-replica gradient reduce-scatter (ZeRO-1) moves
+    # bf16 instead of f32 — local microbatch accumulation stays f32, the
+    # wire bytes halve.  (int8 error-feedback compression is a further 2x:
+    # optim/compress.py, selectable in train.py.)
+    grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    params, opt_state, om = adamw.apply_updates(params, grads, opt_state,
+                                                opt_cfg)
+    metrics = {"loss": loss, "dropped": aux, **om}
+    return params, opt_state, metrics
+
+
+def prefill_step(params, inputs, *, cfg: ModelConfig, chunk: int = 1024):
+    """Full-sequence forward building the KV cache (inference prefill)."""
+    if cfg.frontend == "token":
+        b, s = inputs.shape
+    else:
+        b, s, _ = inputs.shape
+    positions = jnp.arange(s)
+    logits, caches, states, _ = transformer.forward(
+        params, cfg, inputs, positions, caches=None, states=None, chunk=chunk)
+    # prefill emits the last-position logits + (train-path) caches are not
+    # materialized by forward(); serving uses decode_state_from_prefill.
+    return logits[:, -1]
+
+
+def prefill_with_cache(params, inputs, caches, states, *, cfg: ModelConfig,
+                       chunk: int = 1024):
+    """Prefill that also fills the decode caches (serving path)."""
+    if cfg.frontend == "token":
+        b, s = inputs.shape
+    else:
+        b, s, _ = inputs.shape
+    positions = jnp.arange(s)
+    logits, caches, states, _ = transformer.forward(
+        params, cfg, inputs, positions, caches=caches, states=states,
+        chunk=chunk)
+    return logits[:, -1], caches, states
+
+
+def decode_step(params, caches, states, token, pos, *, cfg: ModelConfig,
+                chunk: int = 1024):
+    """One new token against a KV cache / recurrent state (serve_step).
+
+    token: [B] ids (or [B, D] stub embeddings); pos: scalar position.
+    """
+    if cfg.frontend == "token":
+        inputs = token[:, None]
+    else:
+        inputs = token[:, None, :]
+    positions = pos + jnp.arange(1)
+    logits, caches, states, _ = transformer.forward(
+        params, cfg, inputs, positions, caches=caches, states=states,
+        chunk=chunk)
+    return logits[:, -1], caches, states
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_opt(params):
+    return jax.eval_shape(adamw.init_opt, params)

@@ -1,0 +1,128 @@
+"""RWKV6 "Finch" blocks: data-dependent-decay linear attention (attn-free).
+
+Time-mix: token-shift lerp, r/k/v/g projections, per-channel decay
+``w = exp(-exp(w0 + lora(x)))`` and the matrix-state recurrence of
+``kernels/linear_scan`` (with bonus u); channel-mix: token-shift + squared
+ReLU FFN.  The lax.scan training path is the kernel's oracle; decode carries
+per-layer (shift, wkv-state).
+
+State per layer: shift_tm/shift_cm: [B, D]; wkv: [B, H, Dk, Dv].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+from repro.models.scan_utils import chunked_scan
+from repro.models.sharding import shard
+
+LORA_R = 64
+
+
+def n_rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head
+
+
+def init_time_mix(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": init_dense(ks[0], (d, d), dtype=dtype),
+        "w_k": init_dense(ks[1], (d, d), dtype=dtype),
+        "w_v": init_dense(ks[2], (d, d), dtype=dtype),
+        "w_g": init_dense(ks[3], (d, d), dtype=dtype),
+        "w_o": init_dense(ks[4], (d, d), dtype=dtype),
+        "w0": jnp.full((d,), -1.0, jnp.float32),       # decay bias
+        "w_lora_a": init_dense(ks[5], (d, LORA_R), dtype=dtype),
+        "w_lora_b": init_dense(ks[6], (LORA_R, d), scale=0.01, dtype=dtype),
+        "u": init_dense(ks[7], (d,), scale=0.5, dtype=jnp.float32),
+        "ln_scale": jnp.zeros((d,), dtype),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype), "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": init_dense(ks[0], (d, f), dtype=dtype),
+        "w_v": init_dense(ks[1], (f, d), dtype=dtype),
+        "w_r": init_dense(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _token_shift(x, shift_state):
+    """x[t-1] stream: prepend the carried last token (decode-composable)."""
+    prev = jnp.concatenate([shift_state.astype(x.dtype)[:, None], x[:, :-1]],
+                           axis=1)
+    return prev, x[:, -1].astype(jnp.float32)
+
+
+def time_mix_forward(p, x, cfg: ModelConfig, shift_state, wkv_state):
+    b, s, d = x.shape
+    h = n_rwkv_heads(cfg)
+    hd = cfg.rwkv_head
+    prev, new_shift = _token_shift(x, shift_state)
+
+    def lerp(mu):
+        return x + (prev - x) * mu
+
+    r = jnp.einsum("bsd,de->bse", lerp(p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", lerp(p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", lerp(p["mu_v"]), p["w_v"])
+    g = jnp.einsum("bsd,de->bse", lerp(p["mu_g"]), p["w_g"])
+    # data-dependent decay (the "Finch" contribution)
+    lora = jnp.einsum("bsd,dr->bsr", lerp(p["mu_w"]), p["w_lora_a"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora), p["w_lora_b"])
+    w = jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))  # (0,1)
+
+    # heads: [B, S, H, hd]
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hd)
+    u = p["u"].reshape(h, hd)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp          # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]       # [B,H,hd,hd]
+        yt = jnp.einsum("bhk,bhkv->bhv", rt,
+                        state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, yt
+
+    xs = (rh.swapaxes(0, 1), kh.swapaxes(0, 1), vh.swapaxes(0, 1),
+          wh.swapaxes(0, 1))
+    wkv_state, ys = chunked_scan(step, wkv_state, xs, chunk=256)
+    y = ys.swapaxes(0, 1).reshape(b, s, d)             # [B,S,D]
+    y = rms_norm(y.astype(x.dtype), p["ln_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    y = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    return shard(y, "batch", "seq", "embed"), new_shift, wkv_state
+
+
+def channel_mix_forward(p, x, cfg: ModelConfig, shift_state):
+    prev, new_shift = _token_shift(x, shift_state)
+    xk = x + (prev - x) * p["mu_k"]
+    xr = x + (prev - x) * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"]))
+    return shard(r * v, "batch", "seq", "embed"), new_shift
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    h = n_rwkv_heads(cfg)
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, h, cfg.rwkv_head, cfg.rwkv_head),
+                         jnp.float32),
+    }

@@ -1,0 +1,108 @@
+"""Sharding annotations, decoupled from model code.
+
+Model code calls ``shard(x, "batch", "seq", None)`` with *logical* axis
+names; a run installs a mesh + logical->mesh rules (MaxText-style) via
+``use_rules``.  Without an installed context the calls are no-ops, so the
+same model runs on one CPU device (smoke tests) and on the production mesh
+(dry-run / launch) unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# default logical -> mesh-axis rules; pod is folded into data-parallel.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,            # long-context decode shards the KV timeline
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": "model",            # flattened H*Dh projection dim
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "vocab": "model",
+    "state": "model",          # rwkv/ssm recurrent state channels
+    "layers": None,
+    "opt": "data",             # ZeRO-1 optimizer-state sharding axis
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[dict] = None):
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def resolve(*logical: Optional[str]) -> P:
+    """Logical axis names -> PartitionSpec under the current rules."""
+    rules = current_rules()
+    mesh = current_mesh()
+    names = set(mesh.axis_names) if mesh is not None else set()
+    out = []
+    for ax in logical:
+        r = rules.get(ax) if ax is not None else None
+        if r is None:
+            out.append(None)
+        elif isinstance(r, tuple):
+            keep = tuple(a for a in r if a in names)
+            out.append(keep if keep else None)
+        else:
+            out.append(r if r in names else None)
+    return P(*out)
+
+
+def shard(x, *logical: Optional[str]):
+    """with_sharding_constraint under the installed mesh (no-op otherwise).
+
+    A spec that resolves to all-None is treated as *no opinion* rather than
+    "replicate": forcing replication on activations whose producer einsum
+    left them usefully sharded inserts giant all-gathers (§Perf A3)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve(*logical)
+    if all(ax is None for ax in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def axis_resolves(logical: str) -> bool:
+    """True if this logical axis maps to a real mesh axis under the
+    current rules (lets model code skip constraints that would otherwise
+    force replication — §Perf A3)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return False
+    return resolve(logical) != (None,) if False else \
+        tuple(resolve(logical))[0] is not None
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(*logical))

@@ -1,0 +1,139 @@
+"""Mamba-style selective-SSM heads (hymba's parallel-head hybrid).
+
+SSD/mamba2-like parameterization matching the ``kernels/linear_scan``
+recurrence: per head, state S: [n_state, head_dim],
+
+    S_t = exp(-softplus(dt_t)) * S_{t-1} + B_t^T x_t
+    y_t = C_t @ S_t,   gated by silu(z_t)
+
+Simplifications vs. the HF checkpoint (recorded in DESIGN.md §9): no
+depthwise conv1d pre-filter, scalar-per-head decay broadcast over state.
+Training path: jax.lax.scan over time (the ref oracle of the Pallas
+kernel); decode path: one recurrence step against the carried state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense
+from repro.models.scan_utils import chunked_scan
+from repro.models.sharding import shard
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    h, pdim, s = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": init_dense(ks[0], (d, h * pdim), dtype=dtype),
+        "w_z": init_dense(ks[1], (d, h * pdim), dtype=dtype),
+        "w_b": init_dense(ks[2], (d, h * s), dtype=dtype),
+        "w_c": init_dense(ks[3], (d, h * s), dtype=dtype),
+        "w_dt": init_dense(ks[4], (d, h), dtype=dtype),
+        "w_out": init_dense(ks[5], (h * pdim, d), dtype=dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+    }
+
+
+def _proj(p, x, cfg: ModelConfig):
+    b, sq, d = x.shape
+    h, pdim, s = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    xv = jnp.einsum("btd,dp->btp", x, p["w_x"]).reshape(b, sq, h, pdim)
+    z = jnp.einsum("btd,dp->btp", x, p["w_z"]).reshape(b, sq, h, pdim)
+    bb = jnp.einsum("btd,dp->btp", x, p["w_b"]).reshape(b, sq, h, s)
+    cc = jnp.einsum("btd,dp->btp", x, p["w_c"]).reshape(b, sq, h, s)
+    dt = jnp.einsum("btd,dh->bth", x, p["w_dt"]).astype(jnp.float32)
+    decay = jnp.exp(-jax.nn.softplus(dt + p["a_log"][None, None]))  # (0,1)
+    return xv, z, bb, cc, decay
+
+
+def _ssd_chunked(xv, bb, cc, decay, state, chunk: int):
+    """Chunked SSD (mamba2) evaluation of the scalar-per-head recurrence.
+
+    §Perf B1: the per-token scan streams the [n_state, head_dim] state
+    through HBM every step; this form computes each chunk with [C, C]
+    masked matmuls (MXU food) and touches the state only at chunk
+    boundaries — O(T/C) state traffic instead of O(T).
+
+    Log-space decays keep everything bounded: within-chunk factors are
+    exp(L_t - L_s) with t >= s and L non-increasing, so every exponent
+    is <= 0.  xv: [B,T,H,P]; bb/cc: [B,T,H,S]; decay: [B,T,H] in (0,1).
+    """
+    b, t, h, pdim = xv.shape
+    ns = bb.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0
+    n = t // c
+    f32 = jnp.float32
+    xc = xv.reshape(b, n, c, h, pdim).astype(f32)
+    bc = bb.reshape(b, n, c, h, ns).astype(f32)
+    ccx = cc.reshape(b, n, c, h, ns).astype(f32)
+    logw = jnp.log(jnp.clip(decay.reshape(b, n, c, h), 1e-20, 1.0))
+    lcum = jnp.cumsum(logw, axis=2)                       # [B,N,C,H]
+
+    # intra-chunk: G[t,s] = (C_t . B_s) * exp(L_t - L_s), s <= t
+    gmat = jnp.einsum("bnthi,bnshi->bnhts", ccx, bc)
+    dt = lcum[..., :, None, :] - lcum[..., None, :, :]    # [B,N,C,C,H]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(dt), 0.0)
+    gmat = gmat * jnp.moveaxis(dec, -1, 2)                # [B,N,H,C,C]
+    y_intra = jnp.einsum("bnhts,bnshp->bnthp", gmat, xc)
+
+    # chunk-boundary states: S_end = e^{L_C} S_0 + sum_s e^{L_C - L_s} B_s x_s
+    tail = jnp.exp(lcum[..., -1:, :] - lcum)              # [B,N,C,H]
+    kx = jnp.einsum("bnshi,bnsh,bnshp->bnhip", bc, tail, xc)
+    a_full = jnp.exp(lcum[:, :, -1])                      # [B,N,H]
+
+    def carry_fn(s0, inp):
+        af, kxn = inp                                     # [B,H], [B,H,S,P]
+        s1 = s0 * af[..., None, None] + kxn
+        return s1, s0                                     # emit chunk-start
+
+    (state, s_starts) = jax.lax.scan(
+        carry_fn, state.astype(f32),
+        (a_full.swapaxes(0, 1), kx.swapaxes(0, 1)))
+    s_starts = s_starts.swapaxes(0, 1)                    # [B,N,H,S,P]
+
+    # inter-chunk: y += exp(L_t) * C_t . S_chunk_start
+    y_inter = jnp.einsum("bnthi,bnth,bnhip->bnthp",
+                         ccx, jnp.exp(lcum), s_starts)
+    y = (y_intra + y_inter).reshape(b, t, h, pdim)
+    return y, state
+
+
+def ssm_forward(p, x, cfg: ModelConfig, state=None, chunk: int = 128):
+    """x: [B, S, D] -> (y, new_state).  state: [B, H, n_state, head_dim].
+
+    Training/prefill use the chunked SSD path; single-token decode uses the
+    plain recurrence step."""
+    b, sq, d = x.shape
+    h, pdim, ns = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    xv, z, bb, cc, decay = _proj(p, x, cfg)
+
+    if state is None:
+        state = jnp.zeros((b, h, ns, pdim), jnp.float32)
+
+    if sq == 1:
+        at = decay[:, 0]
+        state = (state * at[..., None, None] +
+                 bb[:, 0][..., None] * xv[:, 0][..., None, :])
+        y = jnp.einsum("bhs,bhsp->bhp", cc[:, 0], state)[:, None]
+    elif sq % min(chunk, sq) == 0:
+        y, state = _ssd_chunked(xv, bb, cc, decay, state, chunk)
+    else:
+        def step(s, inp):
+            xt, bt, ct, at = inp
+            s = s * at[..., None, None] + bt[..., None] * xt[..., None, :]
+            yt = jnp.einsum("bhs,bhsp->bhp", ct, s)
+            return s, yt
+        xs = (xv.swapaxes(0, 1), bb.swapaxes(0, 1), cc.swapaxes(0, 1),
+              decay.swapaxes(0, 1))
+        state, ys = chunked_scan(step, state, xs, chunk=256)
+        y = ys.swapaxes(0, 1)
+    y = (y.astype(jnp.float32) *
+         jax.nn.silu(z.astype(jnp.float32))).reshape(b, sq, h * pdim)
+    y = jnp.einsum("btp,pd->btd", y.astype(x.dtype), p["w_out"])
+    return shard(y, "batch", "seq", "embed"), state

@@ -1,0 +1,153 @@
+"""VSN serving slot pool: state-transfer-free elastic inference (DESIGN.md §3).
+
+The KV cache pool is STRETCH's shared sigma for the serving operator:
+request slots are virtual keys with a *fixed* storage layout over the full
+mesh; which *instance* (active replica group) serves a slot is the epoch's
+``f_mu`` — scaling replicas up/down, or draining a straggler, rewrites the
+tiny table and never moves a byte of KV (the SN baseline, implemented for
+comparison, migrates the slot's KV to its new owner — GBs per reconfig).
+
+The engine implements continuous batching as a stream operator: requests
+are tuples (tau = arrival time), admission is the windowed batch assembly,
+and per-tick the active slots advance one decode step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elastic
+from repro.models import model as M, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # token ids
+    max_new: int
+    arrived: int                 # tau
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+
+@dataclasses.dataclass
+class SlotPool:
+    """Fixed-capacity decode slots; free-list + f_mu ownership table."""
+    cfg: ModelConfig
+    n_slots: int
+    max_seq: int
+    n_instances: int
+
+    def __post_init__(self):
+        self.caches, self.states = transformer.init_caches(
+            self.cfg, self.n_slots, self.max_seq)
+        self.free = list(range(self.n_slots))
+        self.pos = np.zeros((self.n_slots,), np.int32)
+        self.fmu = np.arange(self.n_slots, dtype=np.int32) % self.n_instances
+        self.active = np.ones((self.n_instances,), bool)
+        self.kv_bytes_moved = 0   # SN baseline counter
+
+    def alloc(self) -> Optional[int]:
+        return self.free.pop() if self.free else None
+
+    def release(self, slot: int):
+        self.pos[slot] = 0
+        self.free.append(slot)
+
+    def slot_bytes(self) -> int:
+        per_slot = 0
+        for leaf in jax.tree.leaves((self.caches, self.states)):
+            per_slot += leaf.dtype.itemsize * leaf.size // leaf.shape[1] \
+                if leaf.ndim > 1 else 0
+        return per_slot
+
+    # ---- elasticity -------------------------------------------------------
+    def reconfigure_vsn(self, n_active: int) -> int:
+        """VSN: remap slot ownership; zero KV movement.  Returns bytes."""
+        self.active[:] = False
+        self.active[:n_active] = True
+        self.fmu = np.arange(self.n_slots, dtype=np.int32) % max(n_active, 1)
+        return self.fmu.nbytes + self.active.nbytes
+
+    def reconfigure_sn(self, n_active: int) -> int:
+        """SN baseline: slots whose owner changed ship their KV state."""
+        old = self.fmu.copy()
+        moved_bytes = 0
+        self.reconfigure_vsn(n_active)
+        moved = (old != self.fmu) & ~np.isin(np.arange(self.n_slots),
+                                             self.free)
+        moved_bytes = int(moved.sum()) * self.slot_bytes()
+        self.kv_bytes_moved += moved_bytes
+        return moved_bytes
+
+
+class ServingEngine:
+    """Continuous batching driver over a SlotPool."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 max_seq: int, n_instances: int = 1, greedy: bool = True):
+        self.cfg, self.params = cfg, params
+        self.pool = SlotPool(cfg, n_slots, max_seq, n_instances)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, c, s, t, pos: M.decode_step(p, c, s, t, pos, cfg=cfg))
+        self.steps = 0
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit(self):
+        while self.waiting:
+            slot = self.pool.alloc()
+            if slot is None:
+                return
+            req = self.waiting.pop(0)
+            req.slot = slot
+            # prefill token-by-token through the decode path (single code
+            # path; a bulk prefill_with_cache fast path exists for batch=1)
+            for i, t in enumerate(req.prompt):
+                self._step_slot(req, int(t))
+            self.running[req.uid] = req
+
+    def _step_slot(self, req: Request, token: int):
+        slot = req.slot
+        caches, states = self.pool.caches, self.pool.states
+        one = lambda a: a[:, slot:slot + 1] if a is not None else None
+        c1 = jax.tree.map(lambda a: a[:, slot:slot + 1], caches) \
+            if caches is not None else None
+        s1 = jax.tree.map(lambda a: a[:, slot:slot + 1], states) \
+            if states is not None else None
+        tok = jnp.asarray([token], jnp.int32)
+        logits, c1, s1 = self._decode(self.params, c1, s1, tok,
+                                      jnp.int32(self.pool.pos[slot]))
+        if caches is not None:
+            self.pool.caches = jax.tree.map(
+                lambda a, b: a.at[:, slot:slot + 1].set(b), caches, c1)
+        if states is not None:
+            self.pool.states = jax.tree.map(
+                lambda a, b: a.at[:, slot:slot + 1].set(b), states, s1)
+        self.pool.pos[slot] += 1
+        return int(jnp.argmax(logits[0]))
+
+    def tick(self) -> List[Request]:
+        """One decode round over all running requests; returns finished."""
+        self._admit()
+        done = []
+        for req in list(self.running.values()):
+            last = req.out[-1] if req.out else int(req.prompt[-1])
+            nxt = self._step_slot(req, last)
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new:
+                done.append(req)
+                del self.running[req.uid]
+                self.pool.release(req.slot)
+        self.steps += 1
+        return done

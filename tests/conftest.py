@@ -1,0 +1,41 @@
+"""Shared test helpers.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py forces 512."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import tuples as T
+
+
+def make_stream_batch(taus, keys=None, payload=None, source=None, kmax=1):
+    taus = np.asarray(taus, np.int32)
+    n = len(taus)
+    if payload is None:
+        payload = np.zeros((n, 1), np.float32)
+    if keys is not None:
+        keys = np.asarray(keys, np.int32)
+        if keys.ndim == 1:
+            keys = keys[:, None]
+    return T.make_batch(jnp.asarray(taus), jnp.asarray(payload),
+                        keys=None if keys is None else jnp.asarray(keys),
+                        source=None if source is None else jnp.asarray(source),
+                        kmax=kmax)
+
+
+def collect_outputs(outs, n_instances=None):
+    """Flatten (possibly per-instance stacked) Outputs to a sorted list of
+    (tau, payload tuple)."""
+    res = []
+    tau = np.asarray(outs.tau)
+    pay = np.asarray(outs.payload)
+    val = np.asarray(outs.valid)
+    if tau.ndim == 2:  # stacked per instance
+        for j in range(tau.shape[0]):
+            res += [(int(t), tuple(np.round(p, 4))) for t, p, ok in
+                    zip(tau[j], pay[j], val[j]) if ok]
+    else:
+        res += [(int(t), tuple(np.round(p, 4))) for t, p, ok in
+                zip(tau, pay, val) if ok]
+    return sorted(res)

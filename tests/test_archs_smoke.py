@@ -1,0 +1,100 @@
+"""Deliverable (f): per-assigned-architecture smoke tests — reduced config,
+one forward/train step on CPU, output shapes + no NaNs; plus a decode step
+(every assigned arch is decoder-family)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import model as M, transformer
+from repro.optim import adamw
+
+B, S = 2, 16
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = transformer.init_params(rng, cfg)
+    opt = adamw.init_opt(params)
+    if cfg.frontend == "token":
+        inputs = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    else:
+        inputs = jax.random.normal(rng, (B, S, cfg.d_model), jnp.bfloat16)
+    batch = {"inputs": inputs,
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    step = jax.jit(lambda p, o, b: M.train_step(
+        p, o, b, cfg=cfg, opt_cfg=adamw.AdamWConfig(), chunk=8))
+    p2, o2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # params actually moved
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p2)[0]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = transformer.init_params(rng, cfg)
+    caches, states = transformer.init_caches(cfg, B, S)
+    tok = (jnp.zeros((B,), jnp.int32) if cfg.frontend == "token"
+           else jnp.zeros((B, cfg.d_model), jnp.bfloat16))
+    logits, caches, states = jax.jit(
+        lambda p, c, s, t: M.decode_step(p, c, s, t, jnp.int32(S - 1),
+                                         cfg=cfg, chunk=8))(
+        params, caches, states, tok)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_exact_configs_match_assignment():
+    """Pin the full configs to the assignment block."""
+    expect = {
+        "chameleon_34b": (48, 8192, 64, 8, 22016, 65536),
+        "stablelm_12b": (40, 5120, 32, 8, 13824, 100352),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "gemma3_4b": (34, 2560, 8, 4, 10240, 262144),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+        "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001),
+        "deepseek_moe_16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936),
+        "rwkv6_7b": (32, 4096, 0, 0, 14336, 65536),
+    }
+    for arch, (l, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (l, d, h, kv, ff, v), arch
+    # MoE structure
+    ds = get_config("deepseek_moe_16b").moe
+    assert (ds.n_experts, ds.top_k, ds.n_shared) == (64, 6, 2)
+    qw = get_config("qwen3_moe_30b_a3b").moe
+    assert (qw.n_experts, qw.top_k) == (128, 8)
+    # hybrid / rwkv details
+    assert get_config("hymba_1_5b").ssm_state == 16
+    assert get_config("gemma3_12b").window_pattern == (1024, 6)
+
+
+def test_param_counts_near_names():
+    """Total parameter counts should be within ~20% of the checkpoint names."""
+    targets = {"chameleon_34b": 34e9, "stablelm_12b": 12e9,
+               "gemma3_12b": 12e9, "gemma3_4b": 4e9, "qwen3_14b": 14e9,
+               "hymba_1_5b": 1.5e9, "deepseek_moe_16b": 16e9,
+               "qwen3_moe_30b_a3b": 30e9, "rwkv6_7b": 7e9}
+    for arch, t in targets.items():
+        n = get_config(arch).param_count()
+        assert 0.75 * t < n < 1.35 * t, (arch, n / 1e9)
+    # a3b: ~3B active
+    a = get_config("qwen3_moe_30b_a3b").active_param_count()
+    assert 2e9 < a < 4.5e9, a / 1e9

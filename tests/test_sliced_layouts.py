@@ -1,0 +1,108 @@
+"""Coverage for the sharded execution layouts + §Perf regression guards."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_stream_batch
+from repro.core.join import band_predicate, fast_join_init
+from repro.core.join import tick_fast as join_fast
+from repro.core.windows import WindowSpec
+
+WS = WindowSpec(wa=1, ws=60, wt="single")
+FJ = band_predicate(3.0, 2)
+
+
+def _stream(rng, b):
+    taus = np.sort(rng.integers(0, 150, b)).astype(np.int32)
+    src = rng.integers(0, 2, b).astype(np.int32)
+    pay = rng.uniform(0, 12, (b, 2)).astype(np.float32)
+    return make_stream_batch(taus, payload=pay, source=src)
+
+
+@pytest.mark.parametrize("n_inst", [1, 2, 4])
+def test_sliced_join_equals_monolithic(n_inst):
+    """The owner-computes sliced layout (vsn.shard_tick's partitioning,
+    used by benchmarks/q3) matches the monolithic reference: same total
+    comparisons and same stored-ring contents, with zero duplicated work."""
+    K, RING = 32, 8
+    rng = np.random.default_rng(0)
+    batches = [_stream(rng, 16) for _ in range(3)]
+
+    # monolithic
+    st_m = fast_join_init(K, RING, 2)
+    comps_m = 0.0
+    for b in batches:
+        st_m, _ = join_fast(WS, FJ, st_m, b, jnp.ones((K,), bool),
+                            out_cap=64, emit=False)
+        comps_m += float(st_m.comparisons)
+
+    # sliced
+    k_loc = K // n_inst
+    st_s = fast_join_init(K, RING, 2)
+    st_s = jax.tree.map(
+        lambda a: (a.reshape((n_inst, k_loc) + a.shape[1:])
+                   if a.ndim and a.shape and a.shape[0] == K
+                   else jnp.broadcast_to(a, (n_inst,) + a.shape)), st_s)
+    offs = jnp.arange(n_inst) * k_loc
+
+    def one(st_j, off, batch):
+        return join_fast(WS, FJ, st_j, batch, jnp.ones((k_loc,), bool),
+                         out_cap=64, emit=False, k_global=K, k_offset=off)
+
+    comps_s = 0.0
+    for b in batches:
+        st_s, _ = jax.vmap(one, in_axes=(0, 0, None))(st_s, offs, b)
+        comps_s += float(jnp.sum(st_s.comparisons))
+
+    assert comps_m == comps_s
+    # ring contents identical (concatenated slices == monolithic rows)
+    np.testing.assert_array_equal(
+        np.asarray(st_s.tau).reshape(K, RING), np.asarray(st_m.tau))
+    np.testing.assert_array_equal(
+        np.asarray(st_s.n).reshape(K), np.asarray(st_m.n))
+
+
+def test_shard_no_opinion_regression():
+    """§Perf A3 guard: all-None logical specs must NOT force replication
+    (with_sharding_constraint) — they return the input untouched."""
+    from jax.sharding import Mesh
+    from repro.models import sharding as S
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = dict(S.DEFAULT_RULES, heads=None, head_dim=None)
+    x = jnp.ones((4, 4))
+    with S.use_rules(mesh, rules):
+        y = S.shard(x, "heads", "head_dim")   # resolves all-None
+        assert y is x                          # no constraint inserted
+        assert not S.axis_resolves("heads")
+        assert S.axis_resolves("mlp")
+
+
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=24),
+       st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_scalegate_exactly_once_across_tick_partitions(taus, cut):
+    """ScaleGate delivers each ready tuple exactly once regardless of how
+    the stream is partitioned into ticks (Definition 6)."""
+    from repro.core import scalegate
+    taus = sorted(taus)
+    cut = min(cut, len(taus) - 1)
+
+    def run(parts):
+        state = scalegate.init_scalegate(1, capacity=64, kmax=1,
+                                         payload_width=1)
+        got = []
+        for part in parts:
+            if not part:
+                continue
+            state, out = scalegate.push(state, make_stream_batch(part))
+            got += [int(t) for t, ok in zip(np.asarray(out.tau),
+                                            np.asarray(out.valid)) if ok]
+        return got
+
+    whole = run([taus])
+    split = run([taus[:cut], taus[cut:]])
+    assert whole == split == sorted(t for t in taus if t <= max(taus))

@@ -1,0 +1,168 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Corollary 1: A+ on O+ == the M-then-A shared-nothing expansion.
+Chained operators: O+ -> TB -> O+ (ESG_out feeds ESG_in composably, §7).
+Hypothesis: streaming invariants over random sorted streams.
+E2E: streaming wordcount with elastic scaling + an LM train loop with
+checkpoint resume, through the public APIs only.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import collect_outputs, make_stream_batch
+from repro.core import scalegate, tuples as T
+from repro.core.aggregate import count_aggregate
+from repro.core.operator import tick as gen_tick
+from repro.core.runtime import SNPipeline, VSNPipeline
+from repro.core.windows import WindowSpec
+
+K = 16
+WS = WindowSpec(wa=10, ws=20, wt="multi")
+
+
+# ----------------------------------------------------- Corollary 1 / Thm 2 -
+def test_corollary1_aplus_equals_map_then_a():
+    """A+ with multi-key tuples == Map-expansion (one single-key copy per
+    key, Corollary 1) into a plain A."""
+    rng = np.random.default_rng(3)
+    n = 24
+    taus = np.sort(rng.integers(0, 60, n)).astype(np.int32)
+    keys = rng.integers(0, K, (n, 3)).astype(np.int32)
+    keys[rng.random((n, 3)) < 0.3] = -1
+    dedup = []
+    for row in keys:                       # a key set, not a multiset
+        seen = set()
+        dedup.append([k if k >= 0 and k not in seen and not seen.add(k)
+                      else -1 for k in row])
+    keys = np.asarray(dedup, np.int32)
+
+    op = count_aggregate(WS, k_virt=K, out_cap=512)
+    flush = make_stream_batch([200], keys=[[-1, -1, -1]], kmax=3)
+
+    # A+ path: multi-key tuples straight in
+    st_ = op.resolved().init_state()
+    b = make_stream_batch(taus, keys=keys, kmax=3)
+    st_, o1 = gen_tick(op.resolved(), st_, b, jnp.ones((K,), bool))
+    st_, o2 = gen_tick(op.resolved(), st_, flush, jnp.ones((K,), bool))
+    aplus = collect_outputs(o1) + collect_outputs(o2)
+
+    # M-then-A path: expand each tuple into one copy per key (Corollary 1)
+    ex_tau, ex_key = [], []
+    for t, row in zip(taus, keys):
+        for k in row:
+            if k >= 0:
+                ex_tau.append(t)
+                ex_key.append([k])
+    st2 = op.resolved().init_state()
+    b2 = make_stream_batch(ex_tau, keys=np.asarray(ex_key), kmax=1)
+    st2, o1 = gen_tick(op.resolved(), st2, b2, jnp.ones((K,), bool))
+    flush1 = make_stream_batch([200], keys=[[-1]], kmax=1)
+    st2, o2 = gen_tick(op.resolved(), st2, flush1, jnp.ones((K,), bool))
+    m_then_a = collect_outputs(o1) + collect_outputs(o2)
+
+    assert sorted(aplus) == sorted(m_then_a)
+
+
+# --------------------------------------------------------- operator chains -
+def test_chained_operators_via_tb():
+    """O+ -> TB -> O+: the first stage's outputs (Lemma 2 sorted) feed a
+    downstream ScaleGate as a valid source set, per §6 composability."""
+    rng = np.random.default_rng(5)
+    op1 = count_aggregate(WS, k_virt=K, out_cap=512)
+    # stage 2 counts stage-1 windows per key over a coarser window
+    op2 = count_aggregate(WindowSpec(wa=40, ws=40, wt="multi"), k_virt=K,
+                          out_cap=512)
+    st1 = op1.resolved().init_state()
+    st2 = op2.resolved().init_state()
+    sg2 = scalegate.init_scalegate(1, capacity=128, kmax=1, payload_width=2)
+    resp = jnp.ones((K,), bool)
+    got2 = []
+    for i in range(4):
+        taus = np.sort(rng.integers(i * 30, i * 30 + 30, 16)).astype(np.int32)
+        keys = rng.integers(0, K, 16).astype(np.int32)
+        st1, outs1 = gen_tick(op1.resolved(), st1,
+                              make_stream_batch(taus, keys=keys), resp)
+        # feed stage-1 outputs into stage 2's TB (key = payload[0])
+        o_tau = outs1.tau
+        o_keys = outs1.payload[:, :1].astype(jnp.int32)
+        b2 = T.TupleBatch(tau=o_tau, keys=o_keys, payload=outs1.payload,
+                          source=jnp.zeros_like(o_tau),
+                          valid=outs1.valid,
+                          is_control=jnp.zeros_like(outs1.valid),
+                          ctrl_epoch=jnp.zeros_like(o_tau))
+        sg2, ready2 = scalegate.push(sg2, b2)
+        st2, outs2 = gen_tick(op2.resolved(), st2, ready2, resp)
+        got2 += collect_outputs(outs2)
+    # downstream windows produce sorted, keyed counts of upstream outputs
+    ts = [t for t, _ in got2]
+    assert got2 and ts == sorted(ts)
+
+
+# ------------------------------------------------------------- hypothesis --
+@given(st.lists(st.tuples(st.integers(0, 80), st.integers(0, K - 1)),
+                min_size=4, max_size=40),
+       st.integers(2, 4))
+@settings(max_examples=30, deadline=None)
+def test_vsn_equals_oracle_random_streams(items, n_inst):
+    items = sorted(items)
+    taus = [t for t, _ in items]
+    keys = [[k] for _, k in items]
+    op = count_aggregate(WS, k_virt=K, out_cap=1024)
+
+    st_ = op.resolved().init_state()
+    b = make_stream_batch(taus, keys=np.asarray(keys))
+    f = make_stream_batch([500], keys=[[-1]])
+    st_, o1 = gen_tick(op.resolved(), st_, b, jnp.ones((K,), bool))
+    st_, o2 = gen_tick(op.resolved(), st_, f, jnp.ones((K,), bool))
+    oracle = sorted(collect_outputs(o1) + collect_outputs(o2))
+
+    pipe = VSNPipeline(op, n_max=4, n_active=n_inst, stash_cap=64)
+    outs = []
+    for batch in (b, f):
+        r1, r2, _ = pipe.step(batch)
+        outs += collect_outputs(r1) + collect_outputs(r2)
+    assert sorted(outs) == oracle
+
+
+# -------------------------------------------------------------------- e2e --
+def test_e2e_streaming_wordcount_with_scaling():
+    from repro.core.controller import ThresholdController
+    from repro.data import datagen
+    rng = np.random.default_rng(2)
+    op = count_aggregate(WindowSpec(wa=100, ws=200, wt="multi"),
+                         k_virt=64, out_cap=1024)
+    pipe = VSNPipeline(op, n_max=8, n_active=2, stash_cap=128)
+    ctl = ThresholdController(n_max=8, k_virt=64,
+                              capacity_per_instance=500.0, n_active=2)
+    n_out, reconfigs = 0, 0
+    for i, b in enumerate(datagen.tweets(
+            rng, n_ticks=6, tick=64, words_per_tweet=3, vocab=300,
+            k_virt=64, rate_per_tick=60)):
+        rc = ctl.observe(rate=300.0 * (1 + i))
+        reconfigs += rc is not None
+        o1, o2, _ = pipe.step(b, reconfig=rc)
+        n_out += len(collect_outputs(o1)) + len(collect_outputs(o2))
+    assert n_out > 0 and reconfigs >= 1
+    assert int(pipe.epoch.reconfigs) >= 1
+
+
+def test_e2e_train_loop(tmp_path):
+    """Few steps of the real train driver (reduced config) incl. resume."""
+    from repro.launch import train as TR
+    d = str(tmp_path / "ckpt")
+    rc = TR.main(["--arch", "hymba-1.5b", "--steps", "6", "--reduced",
+                  "--batch", "2", "--seq", "32", "--ckpt-dir", d,
+                  "--ckpt-every", "3"])
+    assert rc == 0
+    from repro.checkpoint import checkpoint as C
+    assert C.latest_step(d) == 6
+    # resume path: runs 2 more steps from the checkpoint
+    rc = TR.main(["--arch", "hymba-1.5b", "--steps", "8", "--reduced",
+                  "--batch", "2", "--seq", "32", "--ckpt-dir", d])
+    assert rc == 0
