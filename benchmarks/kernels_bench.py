@@ -1,18 +1,26 @@
-"""Structural micro-bench of the Pallas kernels (interpret mode on CPU —
-not TPU timings; recorded so the perf-iteration log has a fixed harness)
-plus their jnp refs (which XLA compiles natively on CPU)."""
+"""Micro-bench of all five kernels through the backend dispatcher.
+
+Each kernel is timed at the session backend (``benchmarks.run --backend``,
+``REPRO_KERNEL_BACKEND``, or the hardware default — ``xla`` on CPU, where
+the jnp ref oracles compile natively; ``pallas`` on TPU) alongside the ref
+oracle, so one harness produces comparable rows on any host."""
 
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.kernels.window_join.ops import window_join_ref_op
-from repro.kernels.flash_attention.ops import attention_ref_op
-from repro.kernels.linear_scan.ops import linear_scan_ref_op
+from repro.kernels import dispatch
+from repro.kernels.window_join.ops import window_join_op, window_join_ref_op
+from repro.kernels.segment_aggregate.ops import segment_aggregate_op
+from repro.kernels.scalegate_merge.ops import scalegate_merge_op
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.linear_scan.ops import linear_scan_op
 
 
 def main():
+    backend = dispatch.default_backend()
     rng = np.random.default_rng(0)
+
     B, K, R, P = 128, 512, 16, 4
     nt = np.sort(rng.integers(0, 1000, B)).astype(np.int32)
     ns = rng.integers(0, 2, B).astype(np.int32)
@@ -20,20 +28,42 @@ def main():
     stt = rng.integers(0, 900, (K, R)).astype(np.int32)
     ss = rng.integers(0, 2, (K, R)).astype(np.int32)
     sp = rng.uniform(0, 100, (K, R, P)).astype(np.float32)
+    us, _ = time_fn(lambda: window_join_op(nt, ns, npay, stt, ss, sp,
+                                           ws=500, backend=backend))
+    comps = B * K * R
+    emit(f"kern_window_join[{backend}]", us, f"{comps / us:.1f} comps/us")
     us, _ = time_fn(lambda: window_join_ref_op(nt, ns, npay, stt, ss, sp,
                                                ws=500))
-    comps = B * K * R
     emit("kern_window_join_ref", us, f"{comps / us:.1f} comps/us")
+
+    N, KS, S, W = 512, 256, 4, 2
+    keys = rng.integers(-1, KS, N).astype(np.int32)
+    slots = rng.integers(0, S, N).astype(np.int32)
+    vals = rng.uniform(0, 1, (N, W)).astype(np.float32)
+    acc = np.zeros((KS, S, W), np.float32)
+    us, _ = time_fn(lambda: segment_aggregate_op(keys, slots, vals, acc,
+                                                 backend=backend))
+    emit(f"kern_segment_aggregate[{backend}]", us, f"{N} hits -> {KS}x{S}")
+
+    n, srcs = 256, 4
+    tau = rng.integers(0, 5000, n).astype(np.int32)
+    src = rng.integers(0, srcs, n).astype(np.int32)
+    valid = rng.random(n) < 0.9
+    us, _ = time_fn(lambda: scalegate_merge_op(tau, src, valid,
+                                               n_sources=srcs,
+                                               backend=backend))
+    emit(f"kern_scalegate_merge[{backend}]", us, f"{n} lanes")
 
     q = rng.normal(0, 1, (8, 256, 64)).astype(np.float32)
     k = rng.normal(0, 1, (8, 256, 64)).astype(np.float32)
-    us, _ = time_fn(lambda: attention_ref_op(q, k, k, causal=True))
-    emit("kern_attention_ref", us, "8x256x64")
+    us, _ = time_fn(lambda: flash_attention_op(q, k, k, causal=True,
+                                               backend=backend))
+    emit(f"kern_attention[{backend}]", us, "8x256x64")
 
     r = rng.normal(0, 1, (4, 512, 32)).astype(np.float32)
     w = rng.uniform(0.9, 0.99, (4, 512, 32)).astype(np.float32)
-    us, _ = time_fn(lambda: linear_scan_ref_op(r, r, r, w))
-    emit("kern_linear_scan_ref", us, "4x512x32")
+    us, _ = time_fn(lambda: linear_scan_op(r, r, r, w, backend=backend))
+    emit(f"kern_linear_scan[{backend}]", us, "4x512x32")
 
 
 if __name__ == "__main__":

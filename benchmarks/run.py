@@ -1,22 +1,56 @@
 """Benchmark harness: one module per paper table/figure (Q1-Q6) + kernels.
 
-``PYTHONPATH=src python -m benchmarks.run``  prints ``name,us_per_call,
-derived`` CSV rows (plus the §Roofline pointer — the roofline table itself
-is produced by repro.launch.roofline against the dry-run artifacts).
+``python -m benchmarks.run [--backend xla|pallas|pallas-interpret]`` prints
+``name,us_per_call,derived`` CSV rows (plus the §Roofline pointer — the
+roofline table itself is produced by repro.launch.roofline against the
+dry-run artifacts).  ``--backend`` sets the kernel dispatch default for the
+whole run; unset, it resolves to ``xla`` on CPU hosts and ``pallas`` on TPU
+(see ``repro.kernels.dispatch``).
 """
 
+import argparse
+import os
 import sys
 import traceback
 
+# plain `python -m benchmarks.run` from a checkout: put src/ on the path
+# (pytest gets this from pyproject's pythonpath; bare python does not)
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="kernel dispatch backend (default: xla on CPU, "
+                         "pallas on TPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run "
+                         "(e.g. kernels_bench,q1_wordcount)")
+    args = ap.parse_args(argv)
+
+    from repro.kernels import dispatch
+    dispatch.set_default_backend(args.backend)
+    print(f"# backend={dispatch.default_backend()}", flush=True)
     print("name,us_per_call,derived")
     from benchmarks import (kernels_bench, q1_wordcount, q2_forward,
                             q3_scalejoin, q4_reconfig, q5_elastic_stress,
                             q6_nyse)
+    mods = (q1_wordcount, q2_forward, q3_scalejoin, q4_reconfig,
+            q5_elastic_stress, q6_nyse, kernels_bench)
+    if args.only:
+        keep = {s.strip() for s in args.only.split(",")}
+        names = {m.__name__.split(".")[-1] for m in mods}
+        unknown = keep - names
+        if unknown:
+            ap.error(f"--only: unknown module(s) {sorted(unknown)}; "
+                     f"choose from {sorted(names)}")
+        mods = tuple(m for m in mods if m.__name__.split(".")[-1] in keep)
     ok = True
-    for mod in (q1_wordcount, q2_forward, q3_scalejoin, q4_reconfig,
-                q5_elastic_stress, q6_nyse, kernels_bench):
+    for mod in mods:
         try:
             mod.main()
         except Exception:

@@ -1,0 +1,55 @@
+"""jax version compatibility layer.
+
+The repo targets the current jax API surface but must run on whatever jax
+the host ships.  Two moves per release line matter to us:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` (0.4.x) to a
+  top-level ``jax.shard_map`` export (>= 0.6).
+* the replication-check kwarg was renamed ``check_rep`` (0.4.x/0.5) ->
+  ``check_vma`` (>= 0.6, after the varying-manual-axes rework).
+
+Callers import ``shard_map`` from here and pass modern (``check_vma``)
+kwargs through :func:`shard_map_kwargs`, which rewrites them for the
+installed jax.  Nothing else in the repo touches the experimental
+namespace directly.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Dict
+
+import jax
+
+JAX_VERSION = tuple(int(p) for p in jax.__version__.split(".")[:3])
+
+try:                                       # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                        # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+# modern name -> legacy name, applied only when the installed jax wants it
+_KWARG_RENAMES = {"check_vma": "check_rep"}
+
+
+def shard_map_kwargs(**kwargs: Any) -> Dict[str, Any]:
+    """Rewrite modern shard_map kwargs for the installed jax.
+
+    ``check_vma`` is renamed to ``check_rep`` on jax versions predating the
+    varying-manual-axes rework; kwargs the installed shard_map does not
+    accept at all are dropped (they are all behavior-preserving checks).
+    """
+    out: Dict[str, Any] = {}
+    for name, value in kwargs.items():
+        if name not in _SHARD_MAP_PARAMS and name in _KWARG_RENAMES:
+            name = _KWARG_RENAMES[name]
+        if name in _SHARD_MAP_PARAMS:
+            out[name] = value
+    return out
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """Version-adaptive ``jax.shard_map`` (modern kwarg spelling)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **shard_map_kwargs(**kwargs))

@@ -106,11 +106,19 @@ def fast_init(op: OperatorDef) -> FastAggState:
                         collisions=jnp.zeros((), jnp.int32))
 
 
+def _segment_tile_k(k: int) -> int:
+    """Largest MXU-friendly tile that divides K (the kernel asserts K % tile)."""
+    return 128 if k % 128 == 0 else k
+
+
 def _scatter_reduce(op: OperatorDef, kind: str, acc, ready: T.TupleBatch,
-                    resp: jax.Array, next_l):
+                    resp: jax.Array, next_l, backend: str = None):
     """Scatter the whole tick into (key, slot) cells: the paper's per-tuple
-    f_R loop becomes one segment-reduce (kernels/segment_aggregate is the
-    Pallas twin of this einsum formulation)."""
+    f_R loop becomes one segment-reduce, executed by the dispatched
+    ``segment_aggregate`` kernel for additive reducers (count/sum; ``xla``
+    resolves to the jnp scatter-add oracle, the Pallas backends to the
+    one-hot matmul kernel).  ``max`` is not additive and keeps the scatter.
+    """
     ws = op.window
     live = ready.valid & ~ready.is_control
     l_min = jnp.maximum(ws.earliest_win_l(ready.tau), next_l)
@@ -133,22 +141,25 @@ def _scatter_reduce(op: OperatorDef, kind: str, acc, ready: T.TupleBatch,
     k = jnp.concatenate(hits_k)
     m = jnp.concatenate(hits_m)
     s = op.slot_of(l)
-    if kind == "count":
-        upd = m.astype(jnp.float32)[:, None]
-        acc = acc.at[k, s].add(jnp.where(m[:, None], upd, 0.0), mode="drop")
-    elif kind == "max":
+    if kind == "max":
         val = jnp.tile(ready.payload[:, :1], (l.shape[0] // ready.batch, 1))
         acc = acc.at[k, s].max(jnp.where(m[:, None], val, -jnp.inf), mode="drop")
-    else:  # "sum"
-        val = jnp.tile(ready.payload[:, :acc.shape[-1]],
-                       (l.shape[0] // ready.batch, 1))
-        acc = acc.at[k, s].add(jnp.where(m[:, None], val, 0.0), mode="drop")
+    else:
+        from repro.kernels.segment_aggregate.ops import segment_aggregate_op
+        if kind == "count":
+            val = jnp.ones((l.shape[0], 1), jnp.float32)
+        else:  # "sum"
+            val = jnp.tile(ready.payload[:, :acc.shape[-1]],
+                           (l.shape[0] // ready.batch, 1))
+        acc = segment_aggregate_op(
+            jnp.where(m, k, -1), s, jnp.where(m[:, None], val, 0.0), acc,
+            tile_k=_segment_tile_k(acc.shape[0]), backend=backend)
     return acc, k, s, l, m
 
 
 def tick_fast(op: OperatorDef, kind: str, st: FastAggState,
-              ready: T.TupleBatch, resp: jax.Array
-              ) -> Tuple[FastAggState, Outputs]:
+              ready: T.TupleBatch, resp: jax.Array, *,
+              backend: str = None) -> Tuple[FastAggState, Outputs]:
     """Whole-tick scatter update, then expiry (order-free for commutative f_R)."""
     op = op.resolved()
     ops = st.op_state
@@ -163,7 +174,7 @@ def tick_fast(op: OperatorDef, kind: str, st: FastAggState,
     ops = dataclasses.replace(ops, next_l=next_l)
 
     acc, k_idx, s_idx, l_idx, m_idx = _scatter_reduce(
-        op, kind, ops.zeta["acc"], ready, resp, ops.next_l)
+        op, kind, ops.zeta["acc"], ready, resp, ops.next_l, backend)
 
     # Ring-overrun detection: the live window generations spanned by this
     # tick must fit the physical slot ring, else two generations alias one

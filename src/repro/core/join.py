@@ -115,6 +115,32 @@ def scalejoin_def(window: WindowSpec, k_virt: int, f_j: Callable, *,
                        lazy_expiry=True, name=name)
 
 
+def band_join_counts(st: "FastJoinState", ready: T.TupleBatch,
+                     window: WindowSpec, *, band: float = 10.0,
+                     n_attrs: int = 2, backend: str = None):
+    """Counting-only band-join tick via the dispatched ``window_join`` kernel.
+
+    The Pallas twin of ``tick_fast`` phase 1 under full responsibility
+    (every key row live): per-incoming-tuple match counts against the stored
+    rings plus the live-comparison total — the Q3/Q6 throughput accounting
+    path, with the backend (``xla`` ref oracle on CPU, Pallas on TPU) picked
+    by the kernel dispatcher.  Returns ``(counts i32[B, K], comparisons)``.
+
+    The kernel has no validity input, so invalid/control lanes (the padding
+    of a static ScaleGate batch) are neutralized by pushing their tau past
+    every stored tuple's freshness horizon — they match nothing and count
+    no comparisons, same as ``tick_fast``'s ``live_in`` mask.
+    """
+    from repro.core.watermark import INF_TIME
+    from repro.kernels.window_join.ops import window_join_op
+
+    live = ready.valid & ~ready.is_control
+    tau = jnp.where(live, ready.tau, INF_TIME)
+    return window_join_op(tau, ready.source, ready.payload,
+                          st.tau, st.stream, st.pay, ws=window.ws,
+                          band=band, n_attrs=n_attrs, backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # Blocked fast path (the TPU execution; kernels/window_join is its twin)
 # ---------------------------------------------------------------------------

@@ -71,12 +71,37 @@ def _stable_order(tau: jax.Array, source: jax.Array, valid: jax.Array) -> jax.Ar
     return order1[order2]
 
 
-def push(state: ScaleGateState, incoming: T.TupleBatch
-         ) -> Tuple[ScaleGateState, T.TupleBatch]:
+def merge_order(tau: jax.Array, source: jax.Array, valid: jax.Array,
+                n_sources: int, backend: str = None) -> jax.Array:
+    """The merge's total order, via the kernel backend dispatcher.
+
+    ``xla`` (the CPU default) keeps the exact legacy order — lexicographic
+    ``(tau, source, arrival)``.  The Pallas backends run the
+    ``scalegate_merge`` bitonic network, which orders by ``(tau, arrival)``;
+    both are valid ScaleGate total orders (ready-set content and per-tau
+    grouping are identical — only the tie order among equal timestamps from
+    different sources differs).  The kernel requires a power-of-two batch;
+    non-power-of-two batches fall back to the argsort path.
+    """
+    from repro.kernels import dispatch
+
+    n = tau.shape[0]
+    if dispatch.resolve(backend) != "xla" and n > 1 and n & (n - 1) == 0:
+        from repro.kernels.scalegate_merge.ops import scalegate_merge_op
+        order, _, _ = scalegate_merge_op(tau, source, valid,
+                                         n_sources=n_sources, backend=backend)
+        return order
+    return _stable_order(tau, source, valid)
+
+
+def push(state: ScaleGateState, incoming: T.TupleBatch, *,
+         backend: str = None) -> Tuple[ScaleGateState, T.TupleBatch]:
     """Merge a tick of per-source tuples; emit the ready prefix.
 
     The emitted batch has static size ``capacity + incoming.batch`` with a
     validity mask selecting the ready tuples (sorted, exactly-once).
+    ``backend`` selects the merge-sort realization (see ``merge_order``);
+    the per-source watermark frontiers are stateful and always tracked here.
     """
     cap = state.capacity
     combined = T.concat(state.stash, incoming)
@@ -85,7 +110,8 @@ def push(state: ScaleGateState, incoming: T.TupleBatch
     wstate = wm.observe(state.wmark, incoming.source, incoming.tau, incoming.valid)
     w = wstate.value()
 
-    order = _stable_order(combined.tau, combined.source, combined.valid)
+    order = merge_order(combined.tau, combined.source, combined.valid,
+                        state.wmark.n_sources, backend)
     merged = T.take(combined, order)
 
     ready = merged.valid & (merged.tau <= w)

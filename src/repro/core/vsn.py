@@ -126,7 +126,8 @@ def shard_tick(op: OperatorDef, mesh, axis: str):
     merge (rows are disjoint by layout).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     n_shards = mesh.shape[axis]
     assert op.k_virt % n_shards == 0

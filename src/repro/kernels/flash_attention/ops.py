@@ -1,10 +1,11 @@
-"""Jitted public entry points for the flash_attention kernel (incl. GQA)."""
+"""Backend-dispatched public entry points for flash_attention (incl. GQA)."""
 
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -15,15 +16,28 @@ def _gqa_expand(k, n_rep):
     return jnp.repeat(k, n_rep, axis=0)
 
 
+def _xla(q, k, v, *, causal, window, blk_q=None, blk_k=None):
+    del blk_q, blk_k                # Pallas tiling knobs
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+dispatch.register_kernel("flash_attention", pallas=flash_attention, xla=_xla)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "blk_q", "blk_k", "interpret", "n_rep"))
-def flash_attention_op(q, k, v, *, causal=True, window=None, n_rep=1,
-                       blk_q=128, blk_k=128, interpret=True):
-    """q: [BH_q, Sq, D]; k, v: [BH_kv, Skv, D] with BH_q = BH_kv * n_rep."""
+    "causal", "window", "blk_q", "blk_k", "n_rep", "backend"))
+def _impl(q, k, v, *, causal, window, n_rep, blk_q, blk_k, backend):
     k = _gqa_expand(k, n_rep)
     v = _gqa_expand(v, n_rep)
-    return flash_attention(q, k, v, causal=causal, window=window,
-                           blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+    fn = dispatch.lookup("flash_attention", backend)
+    return fn(q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k)
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None, n_rep=1,
+                       blk_q=128, blk_k=128, backend=None):
+    """q: [BH_q, Sq, D]; k, v: [BH_kv, Skv, D] with BH_q = BH_kv * n_rep."""
+    return _impl(q, k, v, causal=causal, window=window, n_rep=n_rep,
+                 blk_q=blk_q, blk_k=blk_k, backend=dispatch.resolve(backend))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "n_rep"))

@@ -1,16 +1,31 @@
-"""Jitted public entry points for the linear_scan kernel."""
+"""Backend-dispatched public entry points for the linear_scan kernel."""
 
 import functools
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.linear_scan.linear_scan import linear_scan
 from repro.kernels.linear_scan.ref import linear_scan_ref
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def linear_scan_op(r, k, v, w, u=None, *, chunk=64, interpret=True):
-    return linear_scan(r, k, v, w, u, chunk=chunk, interpret=interpret)
+def _xla(r, k, v, w, u=None, *, chunk=None):
+    del chunk                       # a Pallas tiling knob; lax.scan instead
+    return linear_scan_ref(r, k, v, w, u)
+
+
+dispatch.register_kernel("linear_scan", pallas=linear_scan, xla=_xla)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def _impl(r, k, v, w, u, *, chunk, backend):
+    fn = dispatch.lookup("linear_scan", backend)
+    return fn(r, k, v, w, u, chunk=chunk)
+
+
+def linear_scan_op(r, k, v, w, u=None, *, chunk=64, backend=None):
+    return _impl(r, k, v, w, u, chunk=chunk,
+                 backend=dispatch.resolve(backend))
 
 
 linear_scan_ref_op = jax.jit(linear_scan_ref)

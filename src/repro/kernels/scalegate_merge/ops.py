@@ -1,17 +1,27 @@
-"""Jitted public entry points for the scalegate_merge kernel."""
+"""Backend-dispatched public entry points for the scalegate_merge kernel."""
 
 import functools
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.scalegate_merge.ref import scalegate_merge_ref
 from repro.kernels.scalegate_merge.scalegate_merge import scalegate_merge
 
+dispatch.register_kernel("scalegate_merge",
+                         pallas=scalegate_merge, xla=scalegate_merge_ref)
 
-@functools.partial(jax.jit, static_argnames=("n_sources", "interpret"))
-def scalegate_merge_op(tau, src, valid, *, n_sources, interpret=True):
-    return scalegate_merge(tau, src, valid, n_sources=n_sources,
-                           interpret=interpret)
+
+@functools.partial(jax.jit, static_argnames=("n_sources", "backend"))
+def _impl(tau, src, valid, *, n_sources, backend):
+    fn = dispatch.lookup("scalegate_merge", backend)
+    return fn(tau, src, valid, n_sources=n_sources)
+
+
+def scalegate_merge_op(tau, src, valid, *, n_sources, backend=None):
+    """-> (order i32[N], ready i32[N], watermark i32[1])."""
+    return _impl(tau, src, valid, n_sources=n_sources,
+                 backend=dispatch.resolve(backend))
 
 
 scalegate_merge_ref_op = jax.jit(

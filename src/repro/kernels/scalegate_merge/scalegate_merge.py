@@ -6,10 +6,10 @@ kernel produces the *total order* every reader observes — a bitonic sort
 network over (tau, lane) in VMEM — plus the Definition-3 watermark
 ``W = min_i max_m tau_i^m`` and per-lane readiness ``tau <= W``.
 
-The sort key packs (tau, arrival-lane) into one i64-free composite so the
-network is stable-deterministic: key = tau * LANE_PAD + lane with
-LANE_PAD = next_pow2(n), using f32-safe int32 range (tau < 2^31 / LANE_PAD
-— enforced by the wrapper; benchmark streams use relative ticks).
+The network compares (tau, arrival-lane) lexicographically — the lane
+tie-break rides along as the carried index — so the sort is
+stable-deterministic over the full int32 tau range (no packed-key
+composite, no overflow restriction).
 
 Single-program kernel (ticks are small: <= 4K lanes), entire tick resident
 in VMEM; the bitonic network is log^2(n) masked min/max passes — pure VPU.
@@ -27,25 +27,45 @@ from repro.core.watermark import INF_TIME
 
 
 def _bitonic_sort(keys, idx):
-    """In-register bitonic sort of (keys, idx); n = power of two."""
+    """In-register bitonic sort of (keys, idx); n = power of two.
+
+    Each compare-exchange pass is expressed as a reshape to
+    ``[n/(2*stride), 2, stride]``: the two partner lanes (``lane ^ stride``)
+    land in the middle axis, so the exchange is a vectorized select
+    instead of an n-way per-lane gather (``keys[partner]``) — the gather form
+    lowers to n scalar loads per pass under the Pallas interpreter and is
+    what made interpret-mode runs minutes-long.  Equal keys tie-break on the
+    carried original lane (``idx``), making the order total and stable over
+    the whole int32 key range.
+    """
     n = keys.shape[0]
     stages = n.bit_length() - 1
-    lane = jnp.arange(n)
     for stage in range(stages):
         for sub in range(stage, -1, -1):
-            partner = lane ^ (1 << sub)
-            dir_up = (lane & (1 << (stage + 1))) == 0
-            pk = keys[partner]
-            pi = idx[partner]
-            first = lane < partner
-            # ascending blocks keep min in the lower lane
-            keep_self = jnp.where(first == dir_up, keys <= pk, keys >= pk)
-            keys = jnp.where(keep_self, keys, pk)
-            idx = jnp.where(keep_self, idx, pi)
+            stride = 1 << sub
+            groups = n // (2 * stride)
+            ks = keys.reshape(groups, 2, stride)
+            ix = idx.reshape(groups, 2, stride)
+            lo_k, hi_k = ks[:, 0], ks[:, 1]
+            lo_i, hi_i = ix[:, 0], ix[:, 1]
+            # block direction: ascending iff bit (stage+1) of the lane is 0;
+            # constant within a group (2*stride <= 2^(stage+1), aligned).
+            first_lane = (jax.lax.broadcasted_iota(jnp.int32, (groups, 1), 0)
+                          * (2 * stride))
+            dir_up = (first_lane & (1 << (stage + 1))) == 0
+            lex_gt = (lo_k > hi_k) | ((lo_k == hi_k) & (lo_i > hi_i))
+            lex_lt = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_i < hi_i))
+            swap = jnp.where(dir_up, lex_gt, lex_lt)
+            new_lo_k = jnp.where(swap, hi_k, lo_k)
+            new_hi_k = jnp.where(swap, lo_k, hi_k)
+            new_lo_i = jnp.where(swap, hi_i, lo_i)
+            new_hi_i = jnp.where(swap, lo_i, hi_i)
+            keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
+            idx = jnp.stack([new_lo_i, new_hi_i], axis=1).reshape(n)
     return keys, idx
 
 
-def _kernel(n_sources, lane_pad, tau_ref, src_ref, valid_ref,
+def _kernel(n_sources, tau_ref, src_ref, valid_ref,
             order_ref, ready_ref, wmark_ref):
     tau = tau_ref[...]
     src = src_ref[...]
@@ -60,7 +80,7 @@ def _kernel(n_sources, lane_pad, tau_ref, src_ref, valid_ref,
     w = jnp.min(per_src_max)
     wmark_ref[0] = w
 
-    key = jnp.where(valid, tau, INF_TIME // lane_pad) * lane_pad + lane
+    key = jnp.where(valid, tau, INF_TIME)
     skey, order = _bitonic_sort(key, lane)
     order_ref[...] = order
     ready_ref[...] = jnp.where(valid[order] & (tau[order] <= w), 1, 0
@@ -71,9 +91,8 @@ def scalegate_merge(tau, src, valid, *, n_sources: int,
                     interpret: bool = False):
     n = tau.shape[0]
     assert n & (n - 1) == 0, "tick size must be a power of two"
-    lane_pad = 1 << (n - 1).bit_length() if n > 1 else 1
 
-    kern = functools.partial(_kernel, n_sources, max(lane_pad, 2))
+    kern = functools.partial(_kernel, n_sources)
     return pl.pallas_call(
         kern,
         grid=(1,),

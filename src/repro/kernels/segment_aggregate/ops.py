@@ -1,18 +1,32 @@
-"""Jitted public entry points for the segment_aggregate kernel."""
+"""Backend-dispatched public entry points for the segment_aggregate kernel."""
 
 import functools
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
 from repro.kernels.segment_aggregate.segment_aggregate import segment_aggregate
 
 
-@functools.partial(jax.jit, static_argnames=("tile_k", "interpret"))
-def segment_aggregate_op(keys, slots, vals, acc, *, tile_k=128,
-                         interpret=True):
-    return segment_aggregate(keys, slots, vals, acc, tile_k=tile_k,
-                             interpret=interpret)
+def _xla(keys, slots, vals, acc, *, tile_k=None):
+    del tile_k                      # a Pallas tiling knob; XLA fuses freely
+    return segment_aggregate_ref(keys, slots, vals, acc)
+
+
+dispatch.register_kernel("segment_aggregate",
+                         pallas=segment_aggregate, xla=_xla)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k", "backend"))
+def _impl(keys, slots, vals, acc, *, tile_k, backend):
+    fn = dispatch.lookup("segment_aggregate", backend)
+    return fn(keys, slots, vals, acc, tile_k=tile_k)
+
+
+def segment_aggregate_op(keys, slots, vals, acc, *, tile_k=128, backend=None):
+    return _impl(keys, slots, vals, acc, tile_k=tile_k,
+                 backend=dispatch.resolve(backend))
 
 
 segment_aggregate_ref_op = jax.jit(segment_aggregate_ref)

@@ -1,22 +1,47 @@
-"""Jitted public entry points for the window_join kernel."""
+"""Backend-dispatched public entry points for the window_join kernel."""
 
 import functools
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.window_join.ref import window_join_ref
 from repro.kernels.window_join.window_join import window_join
 
 
-@functools.partial(jax.jit, static_argnames=("ws", "band", "n_attrs",
-                                             "tile_k", "interpret"))
-def window_join_op(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
-                   ws, band=10.0, n_attrs=2, tile_k=128, interpret=True):
+def _pallas(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+            ws, band, n_attrs, tile_k, interpret):
     counts, comps = window_join(
         new_tau, new_src, new_pay, st_tau, st_src, st_pay,
-        ws=ws, band=band, n_attrs=n_attrs, tile_k=tile_k,
-        interpret=interpret)
+        ws=ws, band=band, n_attrs=n_attrs, tile_k=tile_k, interpret=interpret)
     return counts, comps.sum()
+
+
+def _xla(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+         ws, band, n_attrs, tile_k=None):
+    del tile_k
+    return window_join_ref(new_tau, new_src, new_pay, st_tau, st_src, st_pay,
+                           ws=ws, band=band, n_attrs=n_attrs)
+
+
+dispatch.register_kernel("window_join", pallas=_pallas, xla=_xla)
+
+
+@functools.partial(jax.jit, static_argnames=("ws", "band", "n_attrs",
+                                             "tile_k", "backend"))
+def _impl(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+          ws, band, n_attrs, tile_k, backend):
+    fn = dispatch.lookup("window_join", backend)
+    return fn(new_tau, new_src, new_pay, st_tau, st_src, st_pay,
+              ws=ws, band=band, n_attrs=n_attrs, tile_k=tile_k)
+
+
+def window_join_op(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+                   ws, band=10.0, n_attrs=2, tile_k=128, backend=None):
+    """-> (counts i32[B, K], comparisons i32[])."""
+    return _impl(new_tau, new_src, new_pay, st_tau, st_src, st_pay,
+                 ws=ws, band=band, n_attrs=n_attrs, tile_k=tile_k,
+                 backend=dispatch.resolve(backend))
 
 
 @functools.partial(jax.jit, static_argnames=("ws", "band", "n_attrs"))

@@ -27,8 +27,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.models.config import ModelConfig
 from repro.models.layers import init_dense, swiglu

@@ -1,0 +1,167 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test container may lack hypothesis (it is an optional test extra in
+pyproject.toml).  Rather than skipping three whole property-based test
+modules, ``conftest.py`` installs this module as ``hypothesis`` when the
+real package is absent.  It implements the small API surface the tests use
+— ``given``, ``settings``, and ``strategies.integers/lists/tuples`` — as a
+deterministic random sampler: no shrinking, no database, fixed per-test
+seed (derived from the test name) so failures reproduce exactly.
+
+``max_examples`` is honored but capped (REPRO_FALLBACK_MAX_EXAMPLES,
+default 15): each distinct drawn list length traces a fresh jit shape, and
+the point of tier-1 is a fast green signal.  Installing the real
+hypothesis restores full-strength property testing with no code changes.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Any, Callable, List
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "8"))
+
+
+class SearchStrategy:
+    def example(self, rng: np.random.Generator) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Lists(SearchStrategy):
+    """Lengths are drawn from <= 3 bucketed sizes spanning [min, max], not
+    the full range: every distinct length is a fresh jit trace for the
+    array-shaped tests, and a few examples over {min, mid, max} exercise
+    the same boundaries at a fraction of the compile cost."""
+
+    def __init__(self, elem: SearchStrategy, min_size=0, max_size=10):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+        span = self.max_size - self.min_size
+        self.sizes = sorted({self.min_size, self.min_size + span // 2,
+                             self.max_size})
+
+    def example(self, rng):
+        n = self.sizes[int(rng.integers(0, len(self.sizes)))]
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *elems: SearchStrategy):
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return bool(rng.integers(0, 2))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo=0.0, hi=1.0):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return self.options[int(rng.integers(0, len(self.options)))]
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elements, *, min_size: int = 0, max_size: int = None):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Tuples(*elements)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored) -> Callable:
+    """Decorator recording example budget; composes under ``given``."""
+    def apply(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*strats: SearchStrategy) -> Callable:
+    """Run the test body over deterministically sampled examples."""
+    def wrap(fn):
+        budget = getattr(fn, "_fallback_max_examples", 100)
+        n_examples = max(1, min(budget, _MAX_EXAMPLES_CAP))
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        def runner(*pytest_args, **pytest_kwargs):
+            rng = np.random.default_rng(seed)
+            for i in range(n_examples):
+                example = [s.example(rng) for s in strats]
+                try:
+                    fn(*example, *pytest_args, **pytest_kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"{example!r}") from e
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        runner.hypothesis_fallback = True
+        return runner
+    return wrap
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in ``sys.modules``."""
+    import sys
+    import types
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__is_repro_fallback__ = True
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in dir(strategies):
+        if not name.startswith("_"):
+            setattr(st_mod, name, getattr(strategies, name))
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,0 +1,57 @@
+"""Collection smoke: every test module and every library entry point must
+import under the installed jax — the failure mode this guards against is a
+jax API move (e.g. ``from jax import shard_map``) breaking collection of
+half the suite without any test reporting it."""
+
+import importlib
+import pathlib
+import sys
+
+import pytest
+
+TESTS_DIR = pathlib.Path(__file__).parent
+TEST_MODULES = sorted(p.stem for p in TESTS_DIR.glob("test_*.py"))
+
+LIB_MODULES = [
+    "repro.compat",
+    "repro.kernels.dispatch",
+    "repro.kernels.scalegate_merge.ops",
+    "repro.kernels.segment_aggregate.ops",
+    "repro.kernels.window_join.ops",
+    "repro.kernels.flash_attention.ops",
+    "repro.kernels.linear_scan.ops",
+    "repro.core.scalegate",
+    "repro.core.aggregate",
+    "repro.core.join",
+    "repro.core.vsn",
+    "repro.core.runtime",
+    "repro.models.moe",
+    "repro.launch.train",
+]
+
+
+@pytest.mark.parametrize("mod", TEST_MODULES)
+def test_test_module_imports(mod):
+    if str(TESTS_DIR) not in sys.path:
+        sys.path.insert(0, str(TESTS_DIR))
+    importlib.import_module(mod)
+
+
+@pytest.mark.parametrize("mod", LIB_MODULES)
+def test_library_module_imports(mod):
+    importlib.import_module(mod)
+
+
+def test_shard_map_call_sites_use_compat():
+    """No module may import shard_map from jax directly — only via compat
+    (the 0.4.x/0.6 move is exactly what broke the seed)."""
+    src = pathlib.Path(__file__).parent.parent / "src"
+    offenders = []
+    for py in src.rglob("*.py"):
+        if py.name == "compat.py":
+            continue
+        text = py.read_text()
+        if ("from jax import shard_map" in text
+                or "from jax.experimental.shard_map" in text):
+            offenders.append(str(py))
+    assert not offenders, offenders

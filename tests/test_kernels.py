@@ -1,4 +1,8 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle.
+
+The sweeps force ``backend="pallas-interpret"`` and are ``slow``-marked
+(deselected by default; run with ``pytest -m slow`` on TPU/nightly).  The
+always-on small-shape backend parity lives in test_kernel_parity.py."""
 
 import numpy as np
 import jax
@@ -15,6 +19,7 @@ from repro.kernels.flash_attention.ops import (attention_ref_op,
 from repro.kernels.linear_scan.ops import linear_scan_op, linear_scan_ref_op
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("b,k,r,p,tile", [
     (8, 128, 4, 2, 64), (16, 256, 8, 4, 128), (4, 64, 16, 2, 64),
 ])
@@ -27,12 +32,14 @@ def test_window_join_sweep(b, k, r, p, tile):
     st[rng.random((k, r)) < 0.3] = -1
     ss = rng.integers(0, 2, (k, r)).astype(np.int32)
     sp = rng.uniform(0, 40, (k, r, p)).astype(np.float32)
-    c1, n1 = window_join_op(nt, ns, npay, st, ss, sp, ws=60, tile_k=tile)
+    c1, n1 = window_join_op(nt, ns, npay, st, ss, sp, ws=60, tile_k=tile,
+                            backend="pallas-interpret")
     c2, n2 = window_join_ref_op(nt, ns, npay, st, ss, sp, ws=60)
     np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
     assert int(n1) == int(n2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n,k,s,w,dtype", [
     (32, 128, 2, 1, np.float32), (64, 256, 4, 3, np.float32),
     (16, 64, 1, 2, np.float32),
@@ -43,18 +50,21 @@ def test_segment_aggregate_sweep(n, k, s, w, dtype):
     slots = rng.integers(0, s, n).astype(np.int32)
     vals = rng.uniform(0, 1, (n, w)).astype(dtype)
     acc = rng.uniform(0, 1, (k, s, w)).astype(dtype)
-    a = segment_aggregate_op(keys, slots, vals, acc, tile_k=64)
+    a = segment_aggregate_op(keys, slots, vals, acc, tile_k=64,
+                             backend="pallas-interpret")
     b = segment_aggregate_ref_op(keys, slots, vals, acc)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n,srcs", [(32, 2), (64, 3), (128, 5)])
 def test_scalegate_merge_sweep(n, srcs):
     rng = np.random.default_rng(n)
     tau = rng.integers(0, 500, n).astype(np.int32)
     src = rng.integers(0, srcs, n).astype(np.int32)
     valid = rng.random(n) < 0.85
-    o1, r1, w1 = scalegate_merge_op(tau, src, valid, n_sources=srcs)
+    o1, r1, w1 = scalegate_merge_op(tau, src, valid, n_sources=srcs,
+                                    backend="pallas-interpret")
     o2, r2, w2 = scalegate_merge_ref_op(tau, src, valid, n_sources=srcs)
     assert int(w1[0]) == int(w2[0])
     assert int(r1.sum()) == int(r2.sum())
@@ -62,6 +72,7 @@ def test_scalegate_merge_sweep(n, srcs):
     assert (np.diff(t1) >= 0).all()          # total order
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("causal,window,sq,skv,n_rep", [
     (True, None, 64, 64, 1), (True, 16, 64, 64, 1), (False, None, 32, 64, 1),
     (True, None, 1, 128, 1),                     # decode
@@ -74,11 +85,13 @@ def test_flash_attention_sweep(causal, window, sq, skv, n_rep):
     k = rng.normal(0, 1, (bh_kv, skv, d)).astype(np.float32)
     v = rng.normal(0, 1, (bh_kv, skv, d)).astype(np.float32)
     a = flash_attention_op(q, k, v, causal=causal, window=window,
-                           n_rep=n_rep, blk_q=min(32, sq), blk_k=32)
+                           n_rep=n_rep, blk_q=min(32, sq), blk_k=32,
+                           backend="pallas-interpret")
     b = attention_ref_op(q, k, v, causal=causal, window=window, n_rep=n_rep)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("bh,t,dk,dv,chunk,bonus", [
     (2, 64, 8, 8, 16, True), (3, 128, 16, 24, 32, True),
     (2, 64, 8, 8, 16, False), (1, 256, 32, 32, 64, False),
@@ -90,7 +103,8 @@ def test_linear_scan_sweep(bh, t, dk, dv, chunk, bonus):
     v = rng.normal(0, 1, (bh, t, dv)).astype(np.float32)
     w = rng.uniform(0.5, 0.99, (bh, t, dk)).astype(np.float32)
     u = rng.normal(0, 1, (bh, dk)).astype(np.float32) if bonus else None
-    a = linear_scan_op(r, k, v, w, u, chunk=chunk)
+    a = linear_scan_op(r, k, v, w, u, chunk=chunk,
+                       backend="pallas-interpret")
     b = linear_scan_ref_op(r, k, v, w, u)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
