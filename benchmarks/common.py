@@ -15,6 +15,27 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def failed_rows():
+    """Rows that signal a failure: a FAIL marker in the name or derived
+    column (e.g. ``outputs_match_static=False``).  SKIP rows don't count."""
+    bad = []
+    for name, us, derived in ROWS:
+        text = f"{name} {derived}"
+        if "FAIL" in text or "=False" in text:
+            bad.append((name, us, derived))
+    return bad
+
+
+def write_csv(path: str):
+    import csv
+
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)   # quotes the comma-laden derived column
+        w.writerow(["name", "us_per_call", "derived"])
+        for name, us, derived in ROWS:
+            w.writerow([name, f"{us:.1f}", derived])
+
+
 def time_fn(fn, *args, warmup=2, iters=5):
     for _ in range(warmup):
         out = fn(*args)

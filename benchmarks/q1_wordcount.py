@@ -5,6 +5,11 @@ VSN shares each tuple with all instances (no copies); SN expands each tuple
 per Corollary 1 (one copy per responsible instance).  We report tuples/s,
 per-tick latency, and the measured duplication factor — the paper's Fig. 6
 trend is VSN >= SN with the gap growing in the duplication level.
+
+``--mesh N`` additionally runs the VSN pipeline on an N-device mesh
+(core.runtime.MeshPipeline) with batched multi-tick ingest — the scale-up
+path; emulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 import time
@@ -15,7 +20,7 @@ import jax
 from benchmarks.common import emit, time_fn
 from repro.core.aggregate import count_aggregate, fast_init
 from repro.core.aggregate import tick_fast as agg_fast
-from repro.core.runtime import SNPipeline, VSNPipeline
+from repro.core.runtime import MeshPipeline, SNPipeline, VSNPipeline
 from repro.core.vsn import merge_fast_state
 from repro.core.windows import WindowSpec
 from repro.data import datagen
@@ -59,7 +64,32 @@ def run_case(mode: str, wc_mode: str, pair_dist: int, n_ticks: int = 12):
     return tput, lat_us, dup
 
 
-def main():
+def run_mesh(n_shards: int, wc_mode: str, pair_dist: int, n_ticks: int = 12):
+    """VSN on an n-device mesh: batched multi-tick ingest, one compiled
+    shard_map step for the whole stream after warmup."""
+    from repro.launch.mesh import make_stream_mesh
+
+    rng = np.random.default_rng(7)
+    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2)
+    mesh = make_stream_mesh(n_shards)
+    pipe = MeshPipeline(op, mesh, stash_cap=TICK, mode="fast-agg",
+                        agg_kind="count")
+    batches = list(datagen.tweets(
+        rng, n_ticks=n_ticks, tick=TICK, words_per_tweet=6, vocab=5000,
+        k_virt=K_VIRT, mode=wc_mode, pair_dist=pair_dist, rate_per_tick=50))
+    o = pipe.run(batches[:1])          # compile the T=1 step
+    o = pipe.run(batches[1:])          # compile + run the batched step
+    jax.block_until_ready(o[0].tau)
+    t0 = time.perf_counter()
+    o = pipe.run(batches[1:])
+    jax.block_until_ready(o[0].tau)
+    dt = time.perf_counter() - t0
+    tput = TICK * (n_ticks - 1) / dt
+    coll = pipe.collective_bytes()
+    return tput, sum(coll.values())
+
+
+def main(mesh: int = 0):
     for wc_mode, dist, label in [("wordcount", 0, "wordcount"),
                                  ("paircount", 3, "pair_L"),
                                  ("paircount", 10, "pair_M")]:
@@ -69,7 +99,18 @@ def main():
         emit(f"q1_{label}_sn_tput_tps", 1e6 / t_s, f"{t_s:.0f} t/s")
         emit(f"q1_{label}_speedup", l_v,
              f"vsn/sn={t_v / t_s:.2f}x dup={dup:.2f}")
+    if mesh:
+        if len(jax.devices()) < mesh:
+            emit("q1_mesh_SKIP", 0.0,
+                 f"needs {mesh} devices, have {len(jax.devices())}")
+            return
+        t_m, coll = run_mesh(mesh, "wordcount", 0)
+        emit(f"q1_wordcount_mesh{mesh}_tput_tps", 1e6 / t_m,
+             f"{t_m:.0f} t/s batched ingest, collective_bytes={coll}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0)
+    main(mesh=ap.parse_args().mesh)

@@ -8,8 +8,17 @@ per-instance share is 1/Pi with <2% imbalance (paper Fig. 9 right).
 On this 1-core container the instances execute sequentially (vmap), so
 wall-clock is Pi-invariant too; on Pi cores/chips each slice runs in
 parallel — the paper's linear scaling comes from the partitioning property
-measured here."""
+measured here.
 
+``--mesh N`` runs the same sliced layout on an actual N-device mesh
+(vsn.shard_tick + shard_map, batched multi-tick scan) instead of vmap.
+
+``q3_band_kernel`` is the dispatched ``window_join`` path
+(core.join.band_join_counts): the counting phase executed by the kernel
+backend selected via ``--backend`` (xla oracle on CPU, Pallas on TPU).
+"""
+
+import dataclasses
 import time
 
 import numpy as np
@@ -17,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.join import band_predicate, fast_join_init
+from repro.core.join import band_join_counts, band_predicate, fast_join_init
 from repro.core.join import tick_fast as join_fast
 from repro.core.windows import WindowSpec
 from repro.data import datagen
@@ -27,6 +36,7 @@ RING = 32
 TICK = 256
 WS = WindowSpec(wa=1, ws=5 * 60 * 1000, wt="single")
 FJ = band_predicate(10.0, 2)
+BAND, N_ATTRS = 10.0, 2
 
 
 def run(n_inst: int, n_ticks: int = 8):
@@ -64,7 +74,68 @@ def run(n_inst: int, n_ticks: int = 8):
     return comps.sum() / dt, comps.sum(), cv, TICK * (n_ticks - 1) / dt
 
 
-def main():
+def run_mesh(n_shards: int, n_ticks: int = 8):
+    """The same sliced layout executed on a real device mesh: one
+    shard_map-compiled step scans the whole tick stack (batched ingest)."""
+    from repro.core import vsn
+    from repro.launch.mesh import make_stream_mesh
+
+    rng = np.random.default_rng(3)
+    mesh = make_stream_mesh(n_shards)
+    sigma = fast_join_init(K_VIRT, RING, 4)
+    sigma = dataclasses.replace(
+        sigma, comparisons=jnp.zeros((n_shards,), jnp.float32))
+    sigma = vsn.mesh_device_put(sigma, mesh, "i", K_VIRT)
+    step = jax.jit(vsn.shard_tick(
+        mesh, "i", K_VIRT,
+        vsn.join_local_tick(WS, FJ, K_VIRT, out_cap=64, emit=False), sigma))
+
+    batches = list(datagen.scalejoin(rng, n_ticks=n_ticks, tick=TICK,
+                                     k_virt=1))
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches[1:])
+    sigma, _ = step(sigma, jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *batches[:1]))
+    sigma0 = sigma
+    comps0 = np.asarray(sigma0.comparisons)   # warm-up tick's share
+    sigma, _ = step(sigma0, stack)          # compile the batched step
+    jax.block_until_ready(sigma.comparisons)
+    t0 = time.perf_counter()
+    sigma, _ = step(sigma0, stack)
+    comps = np.asarray(sigma.comparisons) - comps0
+    dt = time.perf_counter() - t0
+    cv = comps.std() / max(comps.mean(), 1e-9) * 100
+    from repro.launch.mesh import collective_bytes
+    coll = collective_bytes(step.lower(sigma0, stack).compile().as_text())
+    return comps.sum() / dt, comps.sum(), cv, sum(coll.values())
+
+
+def run_band_kernel(n_ticks: int = 8):
+    """Counting-only band join through the dispatched window_join kernel."""
+    rng = np.random.default_rng(3)
+    st = fast_join_init(K_VIRT, RING, 4)
+    resp = jnp.ones((K_VIRT,), bool)
+
+    @jax.jit
+    def step(st, batch):
+        counts, comps = band_join_counts(st, batch, WS, band=BAND,
+                                         n_attrs=N_ATTRS)
+        st, _ = join_fast(WS, FJ, st, batch, resp, out_cap=64, emit=False)
+        return st, counts, comps
+
+    batches = list(datagen.scalejoin(rng, n_ticks=n_ticks, tick=TICK,
+                                     k_virt=1))
+    st, counts, comps = step(st, batches[0])
+    jax.block_until_ready(comps)
+    total = 0.0
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        st, counts, comps = step(st, b)
+        total += float(comps)
+    dt = time.perf_counter() - t0
+    return total / dt, total
+
+
+def main(mesh: int = 0):
     base = None
     for n in (1, 2, 4, 8):
         cps, total, cv, tps = run(n)
@@ -72,7 +143,23 @@ def main():
         emit(f"q3_scalejoin_pi{n}", 1e6 / tps,
              f"{cps:.2e} c/s, comps={total:.3e} ({total / base:.2f}x of pi1), "
              f"imbalance_cv={cv:.1f}%")
+    kcps, ktotal = run_band_kernel()
+    emit("q3_band_kernel", 1e6 / max(kcps, 1e-9),
+         f"{kcps:.2e} c/s dispatched window_join, comps={ktotal:.3e}")
+    if mesh:
+        if len(jax.devices()) < mesh:
+            emit("q3_mesh_SKIP", 0.0,
+                 f"needs {mesh} devices, have {len(jax.devices())}")
+            return
+        cps, total, cv, coll = run_mesh(mesh)
+        emit(f"q3_scalejoin_mesh{mesh}", 1e6 / max(cps, 1e-9),
+             f"{cps:.2e} c/s on {mesh}-device mesh, comps={total:.3e} "
+             f"({total / base:.2f}x of pi1), imbalance_cv={cv:.1f}%, "
+             f"collective_bytes={coll}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0)
+    main(mesh=ap.parse_args().mesh)

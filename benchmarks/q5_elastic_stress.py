@@ -1,7 +1,12 @@
 """Q5 (§8.5, Fig. 11): stress reconfigurations under an abruptly-changing
 rate trace with the predictive controller; reports reconfig count, thread
 trace, sustained throughput, and that outputs stay correct (vs a static
-max-width run)."""
+max-width run).
+
+``--mesh N``: the elastic pipeline additionally runs on an N-device mesh
+(MeshPipeline) under the same reconfiguration trace — every f_mu switch is
+a replicated-table swap, zero state rows move between devices, and the
+output set must still match the static oracle exactly."""
 
 import time
 
@@ -11,7 +16,7 @@ from benchmarks.common import emit
 from benchmarks.conftest_shim import collect_outputs
 from repro.core.aggregate import count_aggregate
 from repro.core.controller import PredictiveController, Reconfiguration
-from repro.core.runtime import VSNPipeline
+from repro.core.runtime import MeshPipeline, VSNPipeline
 from repro.core.windows import WindowSpec
 from repro.data import datagen
 
@@ -19,7 +24,7 @@ K_VIRT = 256
 WS = WindowSpec(wa=500, ws=1000, wt="multi")
 
 
-def main():
+def main(mesh: int = 0):
     rng = np.random.default_rng(5)
     op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2)
     ctl = PredictiveController(n_max=32, k_virt=K_VIRT,
@@ -27,9 +32,22 @@ def main():
                                ws_seconds=1.0, n_active=2)
     pipe = VSNPipeline(op, n_max=32, n_active=2, stash_cap=256)
     static = VSNPipeline(op, n_max=32, n_active=32, stash_cap=256)
+    mesh_pipe = None
+    outs_m = []
+    if mesh:
+        import jax
+        from repro.launch.mesh import make_stream_mesh
+        if len(jax.devices()) < mesh:
+            emit("q5_mesh_SKIP", 0.0,
+                 f"needs {mesh} devices, have {len(jax.devices())}")
+            mesh = 0
+        else:
+            mesh_pipe = MeshPipeline(op, make_stream_mesh(mesh),
+                                     stash_cap=256, mode="general",
+                                     n_max=32, n_active=2)
 
     phases = [500, 4000, 1500, 8000, 800, 6000]
-    trace, outs_e, outs_s = [], [], []
+    trace, outs_e, outs_s, replay = [], [], [], []
     n_reconf = 0
     t0 = time.perf_counter()
     tick_id = 0
@@ -44,15 +62,35 @@ def main():
             outs_e += collect_outputs(o1) + collect_outputs(o2)
             o1, o2, _ = static.step(b)
             outs_s += collect_outputs(o1) + collect_outputs(o2)
+            replay.append((b, rc))
             trace.append(ctl.n_active)
             tick_id += 1
     dt = time.perf_counter() - t0
+    # mesh replay outside the timed region so q5_stress stays comparable
+    # between --mesh and non---mesh runs
+    t0_m = time.perf_counter()
+    for b, rc in (replay if mesh_pipe is not None else []):
+        o1, o2, _ = mesh_pipe.step(b, reconfig=rc)
+        outs_m += collect_outputs(o1) + collect_outputs(o2)
+    dt_m = time.perf_counter() - t0_m
     ok = sorted(outs_e) == sorted(outs_s)
     emit("q5_stress_reconfigs", dt / tick_id * 1e6,
          f"{n_reconf} reconfigs, pi trace {min(trace)}..{max(trace)}, "
          f"outputs_match_static={ok}")
     assert ok, "elastic run diverged from static oracle"
+    if mesh_pipe is not None:
+        ok_m = sorted(outs_m) == sorted(outs_s)
+        coll = sum(mesh_pipe.collective_bytes().values())
+        emit(f"q5_stress_mesh{mesh}", dt_m / tick_id * 1e6,
+             f"outputs_match_static={ok_m}, "
+             f"switch_bytes={mesh_pipe.switch_bytes()}, "
+             f"collective_bytes={coll}")
+        assert ok_m, "mesh elastic run diverged from static oracle"
+        assert coll == 0, "mesh step moved state between devices"
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0)
+    main(mesh=ap.parse_args().mesh)

@@ -1,6 +1,12 @@
 """Q6 (§8.6, Fig. 13): NYSE-style hedge self-join under a bursty rate with
 threshold-controller elasticity; reports throughput, comparisons, reconfig
-count and thread range."""
+count and thread range.
+
+``q6_nyse_kernel_join`` is the dispatched ``window_join`` counting path
+(core.join.band_join_counts) over the same trade stream: a band
+candidate-prefilter on the ``[id, nd]`` payload executed by the kernel
+backend selected via ``--backend`` (xla oracle on CPU, Pallas on TPU) —
+the end-to-end accounting row for the TPU-accelerated join."""
 
 import time
 
@@ -10,7 +16,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.controller import ThresholdController
-from repro.core.join import fast_join_init, hedge_predicate
+from repro.core.join import band_join_counts, fast_join_init, hedge_predicate
 from repro.core.join import tick_fast as join_fast
 from repro.core.vsn import merge_fast_state, run_tick
 from repro.core.windows import WindowSpec
@@ -57,6 +63,28 @@ def main():
     emit("q6_nyse_hedge", 1e6 / tput,
          f"{tput:.0f} t/s, {float(st.comparisons):.2e} comps, "
          f"{reconfigs} reconfigs, pi {min(trace)}..{max(trace)}")
+
+    # dispatched window_join kernel: band prefilter counting over the same
+    # stream (backend from the kernel dispatcher; run.py --backend sets it)
+    stk = fast_join_init(K_VIRT, RING, 2)
+
+    @jax.jit
+    def kstep(st, batch):
+        counts, comps = band_join_counts(st, batch, WS, band=0.5, n_attrs=2)
+        st, _ = join_fast(WS, hedge_predicate(), st, batch,
+                          jnp.ones((K_VIRT,), bool), out_cap=64, emit=False)
+        return st, comps
+
+    stk, comps = kstep(stk, batches[0])
+    jax.block_until_ready(comps)
+    total = 0.0
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        stk, comps = kstep(stk, b)
+        total += float(comps)
+    dt = time.perf_counter() - t0
+    emit("q6_nyse_kernel_join", 1e6 / max(total / dt, 1e-9),
+         f"{total / dt:.2e} c/s dispatched window_join, comps={total:.3e}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,8 @@ if _SRC not in sys.path:
 
 
 def main(argv=None) -> None:
+    import inspect
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default=None,
                     choices=["xla", "pallas", "pallas-interpret"],
@@ -30,12 +32,20 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module suffixes to run "
                          "(e.g. kernels_bench,q1_wordcount)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="run mesh variants over N devices where a bench "
+                         "supports it (emulate with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--csv", default=None,
+                    help="also write the result rows to this CSV file "
+                         "(CI uploads it as a workflow artifact)")
     args = ap.parse_args(argv)
 
     from repro.kernels import dispatch
     dispatch.set_default_backend(args.backend)
     print(f"# backend={dispatch.default_backend()}", flush=True)
     print("name,us_per_call,derived")
+    from benchmarks import common
     from benchmarks import (kernels_bench, q1_wordcount, q2_forward,
                             q3_scalejoin, q4_reconfig, q5_elastic_stress,
                             q6_nyse)
@@ -51,13 +61,23 @@ def main(argv=None) -> None:
         mods = tuple(m for m in mods if m.__name__.split(".")[-1] in keep)
     ok = True
     for mod in mods:
+        kw = ({"mesh": args.mesh}
+              if "mesh" in inspect.signature(mod.main).parameters else {})
         try:
-            mod.main()
+            mod.main(**kw)
         except Exception:
             ok = False
-            print(f"{mod.__name__},FAIL,", flush=True)
+            common.emit(mod.__name__, 0.0, "FAIL (exception)")
             traceback.print_exc()
-    if not ok:
+    bad = common.failed_rows()
+    if args.csv:
+        common.write_csv(args.csv)
+    if bad:
+        print(f"# {len(bad)} FAIL row(s):", file=sys.stderr)
+        for name, _, derived in bad:
+            print(f"#   {name}: {derived}", file=sys.stderr)
+    # the bench run gates: any FAIL row (not just exceptions) is nonzero
+    if not ok or bad:
         sys.exit(1)
 
 

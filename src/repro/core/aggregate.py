@@ -112,12 +112,23 @@ def _segment_tile_k(k: int) -> int:
 
 
 def _scatter_reduce(op: OperatorDef, kind: str, acc, ready: T.TupleBatch,
-                    resp: jax.Array, next_l, backend: str = None):
+                    resp: jax.Array, next_l, backend: str = None,
+                    key_offset=0):
     """Scatter the whole tick into (key, slot) cells: the paper's per-tuple
     f_R loop becomes one segment-reduce, executed by the dispatched
     ``segment_aggregate`` kernel for additive reducers (count/sum; ``xla``
     resolves to the jnp scatter-add oracle, the Pallas backends to the
     one-hot matmul kernel).  ``max`` is not additive and keeps the scatter.
+
+    ``f_MK`` returns a key *set* (Definition 4): a key repeated inside one
+    tuple's KMAX-padded key array contributes exactly once, matching the
+    general path's union of one-hots — earlier-column duplicates are masked.
+
+    ``key_offset`` maps global tuple keys into the local row block
+    ``[key_offset, key_offset + k_virt)`` (mesh owner-computes layout);
+    out-of-block keys are dropped like NO_KEY.  Returns the extra mask
+    ``m_any`` (key hits irrespective of ``resp``) used for bookkeeping that
+    must stay identical across instances/shards (slot_l).
     """
     ws = op.window
     live = ready.valid & ~ready.is_control
@@ -125,21 +136,35 @@ def _scatter_reduce(op: OperatorDef, kind: str, acc, ready: T.TupleBatch,
     l_max = ws.latest_win_l(ready.tau)
     if ws.wt == SINGLE:
         l_max = l_min
+    dup_cols = []   # per kk: same key already seen in an earlier column
+    for kk in range(ready.kmax):
+        dup = jnp.zeros((ready.batch,), bool)
+        for kk2 in range(kk):
+            dup = dup | (ready.keys[:, kk2] == ready.keys[:, kk])
+        dup_cols.append(dup)
     hits_l = []
     hits_k = []
     hits_m = []
+    hits_any = []
     for d in range(ws.n_slots if ws.wt == MULTI else 1):
         l = l_min + d
         in_range = (l <= l_max) & live
         for kk in range(ready.kmax):
-            key = ready.keys[:, kk]
-            m = in_range & (key >= 0) & resp[jnp.clip(key, 0, op.k_virt - 1)]
+            key = ready.keys[:, kk] - key_offset
+            in_block = (ready.keys[:, kk] >= 0) & (key >= 0) & \
+                (key < op.k_virt) & ~dup_cols[kk]
+            k_safe = jnp.clip(key, 0, op.k_virt - 1)
             hits_l.append(l)
-            hits_k.append(jnp.clip(key, 0, op.k_virt - 1))
-            hits_m.append(m)
+            hits_k.append(k_safe)
+            hits_m.append(in_range & in_block & resp[k_safe])
+            # slot-grid bookkeeping mask: a live tuple marks its window
+            # generations regardless of key/resp/block, so the value is
+            # identical on every instance and every mesh shard.
+            hits_any.append(in_range)
     l = jnp.concatenate(hits_l)
     k = jnp.concatenate(hits_k)
     m = jnp.concatenate(hits_m)
+    m_any = jnp.concatenate(hits_any)
     s = op.slot_of(l)
     if kind == "max":
         val = jnp.tile(ready.payload[:, :1], (l.shape[0] // ready.batch, 1))
@@ -154,13 +179,18 @@ def _scatter_reduce(op: OperatorDef, kind: str, acc, ready: T.TupleBatch,
         acc = segment_aggregate_op(
             jnp.where(m, k, -1), s, jnp.where(m[:, None], val, 0.0), acc,
             tile_k=_segment_tile_k(acc.shape[0]), backend=backend)
-    return acc, k, s, l, m
+    return acc, k, s, l, m, m_any
 
 
 def tick_fast(op: OperatorDef, kind: str, st: FastAggState,
               ready: T.TupleBatch, resp: jax.Array, *,
-              backend: str = None) -> Tuple[FastAggState, Outputs]:
-    """Whole-tick scatter update, then expiry (order-free for commutative f_R)."""
+              backend: str = None,
+              key_offset=0) -> Tuple[FastAggState, Outputs]:
+    """Whole-tick scatter update, then expiry (order-free for commutative f_R).
+
+    ``key_offset`` runs the tick on a local key block (mesh layout, see
+    ``_scatter_reduce``); emitted key ids stay global.
+    """
     op = op.resolved()
     ops = st.op_state
     live = ready.valid & ~ready.is_control
@@ -173,8 +203,9 @@ def tick_fast(op: OperatorDef, kind: str, st: FastAggState,
                        op.window.earliest_win_l(first_tau), ops.next_l)
     ops = dataclasses.replace(ops, next_l=next_l)
 
-    acc, k_idx, s_idx, l_idx, m_idx = _scatter_reduce(
-        op, kind, ops.zeta["acc"], ready, resp, ops.next_l, backend)
+    acc, k_idx, s_idx, l_idx, m_idx, m_any = _scatter_reduce(
+        op, kind, ops.zeta["acc"], ready, resp, ops.next_l, backend,
+        key_offset)
 
     # Ring-overrun detection: the live window generations spanned by this
     # tick must fit the physical slot ring, else two generations alias one
@@ -186,13 +217,18 @@ def tick_fast(op: OperatorDef, kind: str, st: FastAggState,
     coll = jnp.maximum(span - op.slots, 0) * any_live.astype(jnp.int32)
     occ = ops.occupied
     occ = occ.at[k_idx, s_idx].max(m_idx, mode="drop")
-    slot_l = st.slot_l.at[s_idx].set(jnp.where(m_idx, l_idx, st.slot_l[s_idx]),
+    # slot_l tracks which window generation owns each ring slot — a global
+    # property of the window grid, so the update mask ignores keys, resp
+    # and the local block entirely (m_any = lane-in-range only): every
+    # instance/shard computes the identical value (replication-safe on the
+    # mesh, and the disjoint-writer max-merge is unchanged on one host).
+    slot_l = st.slot_l.at[s_idx].set(jnp.where(m_any, l_idx, st.slot_l[s_idx]),
                                      mode="drop")
 
     ops = dataclasses.replace(ops, zeta={"acc": acc}, occupied=occ,
                               watermark=w_end)
     outs = _empty_outputs(op.out_cap, op.payload_out)
     ops, outs = _expire_all(op, ops, outs, w_end, resp,
-                            jnp.arange(op.k_virt))
+                            key_offset + jnp.arange(op.k_virt))
     return (FastAggState(op_state=ops, slot_l=slot_l,
                          collisions=coll), outs)

@@ -270,15 +270,20 @@ def _expire_all(op: OperatorDef, st: OpState, outs: Outputs, w,
 
 
 def process_tuple(op: OperatorDef, st: OpState, outs: Outputs, tup: Tup,
-                  resp: jax.Array, valid) -> Tuple[OpState, Outputs]:
+                  resp: jax.Array, valid, key_offset=0) -> Tuple[OpState, Outputs]:
     """processSN/processVSN body for one ready tuple (Alg. 2 L31-36).
 
     ``resp`` is the responsibility mask over virtual keys for *this*
     instance under the current epoch's f_mu (Alg. 2 L26 / Alg. 4 L23); the
     executors own its construction.
+
+    ``key_offset`` supports the mesh owner-computes layout (vsn.shard_tick):
+    a shard holding the contiguous key block ``[key_offset, key_offset +
+    k_virt)`` runs the tick against its local rows while tuple keys and
+    emitted key ids stay *global* — ``key_ids`` below are global values.
     """
     ws = op.window
-    key_ids = jnp.arange(op.k_virt)
+    key_ids = key_offset + jnp.arange(op.k_virt)
 
     # updateW (implicit watermarks: the ready stream is sorted, §2.3).
     w = jnp.where(valid, jnp.maximum(st.watermark, tup.tau), st.watermark)
@@ -342,13 +347,17 @@ def process_tuple(op: OperatorDef, st: OpState, outs: Outputs, tup: Tup,
 
 
 def tick(op: OperatorDef, st: OpState, ready: T.TupleBatch,
-         resp: jax.Array, explicit_w=None) -> Tuple[OpState, Outputs]:
+         resp: jax.Array, explicit_w=None, key_offset=0) -> Tuple[OpState, Outputs]:
     """Process one ready batch tuple-by-tuple (general, order-preserving path).
 
     ``explicit_w`` models *explicit watermark* propagation (§2.3): an
     end-of-tick watermark broadcast to the instance regardless of which
     tuples were routed to it — required for SN correctness when an
     instance's queue runs dry (the paper's zero-rate caveat).
+
+    ``key_offset`` shifts the local key block to global ids for the mesh
+    owner-computes layout (see ``process_tuple``); single-host executors
+    leave it 0.
 
     Fast vectorized paths for specific operator families live in
     aggregate.py / join.py; tests pin them against this oracle.
@@ -361,7 +370,7 @@ def tick(op: OperatorDef, st: OpState, ready: T.TupleBatch,
         tup = Tup(tau=ready.tau[lane], payload=ready.payload[lane],
                   source=ready.source[lane], keys=ready.keys[lane])
         valid = ready.valid[lane] & ~ready.is_control[lane]
-        st, outs = process_tuple(op, st, outs, tup, resp, valid)
+        st, outs = process_tuple(op, st, outs, tup, resp, valid, key_offset)
         return (st, outs), None
 
     (st, outs), _ = jax.lax.scan(body, (st, outs), jnp.arange(ready.batch))
@@ -376,5 +385,5 @@ def tick(op: OperatorDef, st: OpState, ready: T.TupleBatch,
                 st, next_l=jnp.maximum(st.next_l, op.window.earliest_win_l(w)))
         else:
             st, outs = _expire_all(op, st, outs, w, resp,
-                                   jnp.arange(op.k_virt))
+                                   key_offset + jnp.arange(op.k_virt))
     return st, outs

@@ -16,6 +16,13 @@ zero responsible keys, negligible work).  Each ``step``:
 
 ``VSNPipeline`` shares sigma (the paper); ``SNPipeline`` keeps dedicated
 sigma_j and pays duplication + state transfer — the measured baseline.
+``MeshPipeline`` is the VSN pipeline on a real device mesh: sigma sharded
+over the instance axis in fixed key blocks (owner-computes), ScaleGate +
+EpochState replicated, the whole step — including batched multi-tick
+ingest (``lax.scan`` over T stacked ticks) — compiled into one
+``shard_map`` call.  Output-set parity with ``VSNPipeline`` is exact,
+including across a reconfiguration, and the compiled step moves zero
+bytes of state between devices (Theorem 3 made physical).
 """
 
 from __future__ import annotations
@@ -202,3 +209,186 @@ class SNPipeline:
         self.duplication.append(float(dup))
         self.bytes_transferred += int(moved)
         return outs1, outs2, switched
+
+
+@dataclasses.dataclass
+class MeshPipeline:
+    """The VSN pipeline executed on a device mesh (paper §5 at scale-up).
+
+    sigma is sharded over ``mesh``'s ``axis`` in fixed contiguous key
+    blocks; every other piece of state (ScaleGate stash + watermark
+    frontiers, EpochState tables) is replicated — each device runs the
+    identical merge over the identical incoming tuples, so the shared-TB
+    contract holds with zero communication.  An ``f_mu`` reconfiguration
+    swaps replicated tables only: no sigma row ever crosses a device
+    (``collective_bytes()`` proves it from the compiled HLO).
+
+    ``mode``:
+      * ``"general"``  — the O+ oracle tick (operator.tick) per key block;
+      * ``"fast-agg"`` — the vectorized commutative-reducer fast path
+                         (aggregate.tick_fast, ``agg_kind`` in count|sum|max).
+
+    ``run([b0, b1, ...])`` is the batched ingest: the T ticks are stacked
+    and scanned inside one compiled shard_map call, so the hot loop does
+    not round-trip to Python per tick.  ``step(b)`` is the T=1 view with
+    the VSNPipeline return convention.
+    """
+    op: OperatorDef
+    mesh: Any
+    axis: str = "i"
+    stash_cap: int = 256
+    mode: str = "general"
+    agg_kind: str = "count"
+    backend: str = None          # kernel backend for the fast-agg scatter
+    n_max: int = None            # logical instance count (tables); defaults
+    n_active: int = None         # to the shard count
+
+    def __post_init__(self):
+        self.op = self.op.resolved()
+        self.n_shards = self.mesh.shape[self.axis]
+        if self.op.k_virt % self.n_shards:
+            raise ValueError(f"k_virt={self.op.k_virt} must divide over "
+                             f"{self.n_shards} shards")
+        self.n_max = self.n_max or self.n_shards
+        self.n_active = self.n_active or self.n_max
+        k = self.op.k_virt
+        fmu = jnp.asarray(np.arange(k) % self.n_active, jnp.int32)
+        active = jnp.asarray(np.arange(self.n_max) < self.n_active, bool)
+        self.epoch = elastic.init_epoch(fmu, active)
+        if self.mode == "general":
+            if self.op.lazy_expiry:
+                # lazy-expiry operators (ScaleJoin) purge/store inside f_U
+                # with global-key semantics that localize_op cannot slice;
+                # the mesh route for them is vsn.join_local_tick.
+                raise ValueError(
+                    "MeshPipeline mode='general' does not support "
+                    "lazy-expiry operators (ScaleJoin): use "
+                    "vsn.shard_tick with vsn.join_local_tick")
+            sigma = self.op.init_state()
+            make_local = vsn.general_local_tick(self.op)
+        elif self.mode == "fast-agg":
+            from repro.core.aggregate import fast_init
+            sigma = fast_init(self.op)
+            make_local = vsn.fast_agg_local_tick(self.op, self.agg_kind,
+                                                 self.backend)
+        else:
+            raise ValueError(f"unknown mode {self.mode!r}")
+        self.sigma = vsn.mesh_device_put(sigma, self.mesh, self.axis, k)
+        self._step_fn = vsn.shard_pipeline_step(self.op, self.mesh, self.axis,
+                                                make_local, sigma)
+        self._jit = jax.jit(self._step_fn)   # one jit; it caches per shape
+        self._sg_ready = False
+        # abstract (shape+sharding) args per step variant, for the lazy
+        # collective_bytes lowering — never pins device buffers
+        self._arg_structs = {}
+
+    # -- plumbing ----------------------------------------------------------
+    def _ensure_gate(self, incoming: T.TupleBatch):
+        if not self._sg_ready:
+            self.sg = scalegate.init_scalegate(
+                self.op.n_inputs, self.stash_cap, incoming.kmax,
+                incoming.payload_width)
+            self._sg_ready = True
+
+    def _frontier_after(self, batches):
+        """Per-source last forwarded tau once ``batches`` have been pushed:
+        the Alg. 5 stamp for a control tuple injected after them."""
+        frontier = np.asarray(self.sg.wmark.frontier).copy()
+        for b in batches:
+            tau = np.asarray(b.tau)
+            src = np.asarray(b.source)
+            ok = np.asarray(b.valid) & ~np.asarray(b.is_control)
+            for i in range(self.op.n_inputs):
+                sel = ok & (src == i)
+                if sel.any():
+                    frontier[i] = max(frontier[i], int(tau[sel].max()))
+        return frontier
+
+    def _ctrl_lanes(self, frontier, epoch_id: int, kmax: int, p: int):
+        lanes = []
+        for i in range(self.op.n_inputs):
+            c = elastic.make_control_tuple(int(frontier[i]), epoch_id,
+                                           kmax, p)
+            c = dataclasses.replace(c, source=jnp.asarray([i], jnp.int32))
+            lanes.append(c)
+        return functools.reduce(T.concat, lanes)
+
+    # -- the driver --------------------------------------------------------
+    def run(self, batches, reconfig: Optional[Reconfiguration] = None,
+            reconfig_at: int = 0):
+        """Push T ticks in one compiled call; an optional reconfiguration is
+        injected as control tuples riding with tick ``reconfig_at`` (Alg. 5:
+        stamped with each source's last forwarded tau at that point).
+
+        Returns ``(outs_pre, outs_post, switched)`` with leading tick axis T
+        and the per-shard output lanes concatenated on axis 1.
+        """
+        batches = list(batches)
+        assert batches, "empty tick stack"
+        self._ensure_gate(batches[0])
+        b0 = batches[0]
+        kmax, p = b0.kmax, b0.payload_width
+
+        padded = []
+        for t, b in enumerate(batches):
+            if reconfig is not None and t == reconfig_at:
+                frontier = self._frontier_after(batches[:t])
+                pad = self._ctrl_lanes(frontier, reconfig.epoch, kmax, p)
+            else:
+                pad = T.empty_batch(self.op.n_inputs, kmax, p)
+            padded.append(T.concat(b, pad))
+        inc_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+
+        if reconfig is not None:
+            fmu_new = jnp.asarray(reconfig.fmu)
+            active_new = jnp.asarray(reconfig.active)
+        else:
+            fmu_new = self.epoch.fmu
+            active_new = self.epoch.active
+
+        key = (len(padded), padded[0].batch, kmax, p)
+        args = (self.sg, self.epoch, self.sigma, inc_stack, fmu_new,
+                active_new)
+        # re-captured every call so collective_bytes lowers the steady-state
+        # variant (first-call inputs arrive host-placed, later ones carry
+        # the replicated shardings of the previous step's outputs).  Only
+        # mesh shardings are kept: a host-placed (single-device) input is
+        # uncommitted in the real call, but abstract lowering would treat
+        # it as pinned and reject the device mix.
+        from jax.sharding import NamedSharding
+
+        def struct(a):
+            sh = getattr(a, "sharding", None)
+            return jax.ShapeDtypeStruct(
+                a.shape, a.dtype,
+                sharding=sh if isinstance(sh, NamedSharding) else None)
+
+        self._arg_structs[key] = jax.tree.map(struct, args)
+        (self.sg, self.epoch, self.sigma, outs1, outs2,
+         switched) = self._jit(*args)
+        return outs1, outs2, switched
+
+    def step(self, incoming: T.TupleBatch,
+             reconfig: Optional[Reconfiguration] = None):
+        """One tick, VSNPipeline-style: returns (outs_pre, outs_post,
+        switched) with the T=1 axis kept on the outputs."""
+        outs1, outs2, switched = self.run([incoming], reconfig=reconfig)
+        return outs1, outs2, switched[0]
+
+    # -- accounting --------------------------------------------------------
+    def collective_bytes(self):
+        """Cross-device traffic of the compiled step(s), from the HLO: the
+        zero-state-transfer witness (Theorem 3).  Returns {collective-kind:
+        bytes} summed over every step variant compiled so far."""
+        from repro.launch.mesh import collective_bytes as _cb
+
+        total = {}
+        for structs in self._arg_structs.values():
+            hlo = self._jit.lower(*structs).compile().as_text()
+            for kind, b in _cb(hlo).items():
+                total[kind] = total.get(kind, 0) + b
+        return total
+
+    def switch_bytes(self) -> int:
+        """Bytes a reconfiguration actually moves: the replicated tables."""
+        return elastic.vsn_switch_bytes(self.epoch)

@@ -14,16 +14,23 @@ Two realizations:
   over instances against the shared state, then the disjoint-writer merge.
   On one device the vmapped instances literally share memory — the paper's
   own setting.
-* ``shard_tick`` — mesh execution: ``sigma`` rows are sharded over the
-  instance axis (fixed layout), the ready batch is replicated by an
-  all-gather, and each shard masks in its rows; the merge is a no-op by
-  construction.  Used by the streaming launcher and the dry-run.
+* ``shard_tick`` / ``shard_pipeline_step`` — mesh execution: ``sigma`` rows
+  are sharded over the device axis in fixed contiguous key blocks
+  (owner-computes: storage layout == responsibility), the ready batch and
+  the epoch tables are replicated (the replicated TB *is* the shared Tuple
+  Buffer: every shard observes the identical total order), and the merge is
+  a no-op by layout.  An ``f_mu`` epoch switch only swaps the replicated
+  tables — no sigma row ever crosses a device (Theorem 3 made physical:
+  the compiled step contains zero cross-device collectives).  Batched
+  multi-tick ingest stacks T ticks and ``lax.scan``s over them inside one
+  ``shard_map`` call, so the hot loop does not round-trip to Python per
+  tick.  ``core.runtime.MeshPipeline`` is the driver.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,41 +124,244 @@ def flatten_outputs(stacked: Outputs) -> Outputs:
                    overflow=jnp.sum(stacked.overflow))
 
 
-def shard_tick(op: OperatorDef, mesh, axis: str):
-    """Build the mesh VSN tick: state sharded over ``axis`` by key blocks,
-    ready batch replicated (the all-gather *is* the shared TB: every shard
-    observes the identical total order — DESIGN.md §2).
+# ---------------------------------------------------------------------------
+# Mesh execution (owner-computes key blocks over a device axis)
+# ---------------------------------------------------------------------------
 
-    Returns a function with the same signature as ``run_tick`` minus the
-    merge (rows are disjoint by layout).
+def localize_op(op: OperatorDef, lo, rows: int) -> OperatorDef:
+    """View of ``op`` over the contiguous key block ``[lo, lo + rows)``.
+
+    ``rows`` is static (shard width); ``lo`` may be a traced shard offset.
+    ``init_zeta`` leaves with a leading ``k_virt`` axis are row-sliced so the
+    MULTI slot-recycle path materializes block-local fresh state.
+
+    Contract: the operator's user functions must treat the key axis
+    *positionally* — they see block-local rows and may not close over the
+    global ``k_virt`` or recompute global key identity from ``arange``
+    (globally-meaningful key ids arrive via the tick's ``key_offset``).
+    ``scalejoin_def`` violates this (its f_U's round-robin store compares
+    the global counter against local ``arange``); ScaleJoin runs on the
+    mesh through ``join_local_tick`` instead, which threads
+    ``k_global``/``k_offset`` through the fast path explicitly.
     """
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    full_init = op.init_zeta
+    k_full = op.k_virt
+
+    def init_local():
+        return jax.tree.map(
+            lambda a: (jax.lax.dynamic_slice_in_dim(a, lo, rows, 0)
+                       if getattr(a, "ndim", 0) and a.shape[0] == k_full
+                       else a),
+            full_init())
+
+    return dataclasses.replace(op, k_virt=rows, init_zeta=init_local)
+
+
+def mesh_state_spec(sigma, k_virt: int, axis: str):
+    """PartitionSpec pytree for a VSN state: leaves keyed by the virtual key
+    axis (leading dim ``k_virt``) shard over ``axis``; scalars/tables
+    replicate.  The watermark / next_l / epoch scalars are safe to
+    replicate because every shard consumes the identical replicated ready
+    batch (Definition 6).  The one per-shard metric — FastJoinState's
+    ``comparisons``, an [n_shards] vector in the mesh layout (see
+    ``join_local_tick``) — is sharded explicitly by field, not by shape,
+    so shape coincidences can never mis-shard a replicated leaf."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.join import FastJoinState
+
+    def spec(a):
+        nd = getattr(a, "ndim", 0)
+        if nd and a.shape[0] == k_virt:
+            return P(axis)
+        return P()
+
+    specs = jax.tree.map(spec, sigma)
+    if isinstance(sigma, FastJoinState):
+        specs = dataclasses.replace(specs, comparisons=P(axis))
+    return specs
+
+
+def mesh_device_put(sigma, mesh, axis: str, k_virt: int):
+    """Place a freshly-initialized global state onto the mesh: key-block
+    sharded sigma, replicated everything else (zero-copy resharding later —
+    the layout is fixed for the pipeline's lifetime, Theorem 3)."""
+    from jax.sharding import NamedSharding
+
+    n_shards = mesh.shape[axis]
+    specs = mesh_state_spec(sigma, k_virt, axis)
+    return jax.tree.map(
+        lambda a, sp: jax.device_put(a, NamedSharding(mesh, sp)), sigma, specs)
+
+
+def general_local_tick(op: OperatorDef) -> Callable:
+    """Owner-computes local tick on the general O+ path: the shard processes
+    every key it stores (storage layout == responsibility; ``f_mu`` remaps
+    logical work attribution, never storage)."""
+    def make(lo, rows: int):
+        op_l = localize_op(op, lo, rows)
+        resp = jnp.ones((rows,), bool)
+
+        def fn(state, ready):
+            return tick(op_l, state, ready, resp, key_offset=lo)
+        return fn
+    return make
+
+
+def fast_agg_local_tick(op: OperatorDef, kind: str,
+                        backend: str = None) -> Callable:
+    """Owner-computes local tick on the vectorized aggregate fast path.
+    Ring-collision counts accumulate across the scanned ticks (per-tick
+    deltas are invisible from inside one batched step)."""
+    from repro.core.aggregate import tick_fast as agg_fast
+
+    def make(lo, rows: int):
+        op_l = localize_op(op, lo, rows)
+        resp = jnp.ones((rows,), bool)
+
+        def fn(state, ready):
+            prev = state.collisions
+            state, outs = agg_fast(op_l, kind, state, ready, resp,
+                                   backend=backend, key_offset=lo)
+            return dataclasses.replace(state,
+                                       collisions=prev + state.collisions), outs
+        return fn
+    return make
+
+
+def join_local_tick(window, f_j: Callable, k_virt: int, out_cap: int,
+                    emit: bool = True) -> Callable:
+    """Owner-computes local tick for the ScaleJoin fast path (the sliced
+    layout of join.tick_fast).  ``comparisons`` becomes a per-shard
+    cumulative counter of shape [1] locally / [n_shards] globally."""
+    from repro.core.join import tick_fast as join_fast
+
+    def make(lo, rows: int):
+        resp = jnp.ones((rows,), bool)
+
+        def fn(state, ready):
+            prev = state.comparisons
+            state, outs = join_fast(window, f_j, state, ready, resp, out_cap,
+                                    emit=emit, k_global=k_virt, k_offset=lo)
+            return dataclasses.replace(
+                state, comparisons=prev + state.comparisons[None]), outs
+        return fn
+    return make
+
+
+def _lift_outs(outs: Outputs) -> Outputs:
+    """Expand per-tick scalar counters to [T, 1] so the shard axis can
+    concatenate them (out_spec P(None, axis) -> [T, n_shards] global)."""
+    return dataclasses.replace(outs, count=outs.count[..., None],
+                               overflow=outs.overflow[..., None])
+
+
+def _outs_spec(axis: str) -> Outputs:
+    from jax.sharding import PartitionSpec as P
+    return Outputs(tau=P(None, axis), payload=P(None, axis),
+                   valid=P(None, axis), count=P(None, axis),
+                   overflow=P(None, axis))
+
+
+def shard_tick(mesh, axis: str, k_virt: int, make_local_tick: Callable,
+               sigma_template):
+    """Build the batched mesh VSN tick: ``step(sigma, ready_stack) ->
+    (sigma, outs_stack)`` scanning T pre-gated ready batches through the
+    owner-computes local tick inside ONE shard_map call.
+
+    ``sigma`` leaves with a leading ``k_virt`` axis live sharded over
+    ``axis`` in fixed contiguous key blocks; the ready stack is replicated
+    (the shared TB).  No merge: rows are disjoint by layout, and the
+    compiled step contains zero cross-device collectives.
+    """
+    from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
 
     n_shards = mesh.shape[axis]
-    assert op.k_virt % n_shards == 0
-    rows_per = op.k_virt // n_shards
+    assert k_virt % n_shards == 0, (k_virt, n_shards)
+    rows = k_virt // n_shards
+    spec_sigma = mesh_state_spec(sigma_template, k_virt, axis)
 
-    def local_tick(state, ready, fmu, active, shard_id):
-        # local rows are [shard_id*rows_per, ...); fmu remaps *work*, and
-        # work for remapped keys writes back via the owner-computes rule.
-        lo = shard_id * rows_per
-        resp_local = jnp.ones((rows_per,), bool) & active[shard_id]
-        del fmu  # owner-computes: storage layout == responsibility
-        return tick(op, state, ready, resp_local)
+    def body(sigma, ready_stack):
+        j = jax.lax.axis_index(axis)
+        tick_l = make_local_tick(j * rows, rows)
 
-    def sharded(state, ready, fmu, active):
-        def body(state, ready, fmu, active):
-            j = jax.lax.axis_index(axis)
-            return local_tick(state, ready, fmu, active, j)
+        def scan_body(sigma, ready):
+            sigma, outs = tick_l(sigma, ready)
+            return sigma, outs
 
-        spec_state = jax.tree.map(lambda _: P(axis), state)
+        sigma, outs = jax.lax.scan(scan_body, sigma, ready_stack)
+        return sigma, _lift_outs(outs)
+
+    def step(sigma, ready_stack):
+        return shard_map(body, mesh=mesh,
+                         in_specs=(spec_sigma, P()),
+                         out_specs=(spec_sigma, _outs_spec(axis)),
+                         check_vma=False)(sigma, ready_stack)
+
+    return step
+
+
+def shard_pipeline_step(op: OperatorDef, mesh, axis: str,
+                        make_local_tick: Callable, sigma_template):
+    """The full VSN pipeline step on the mesh: ScaleGate merge -> epoch
+    handling -> two-phase tick, scanning T stacked incoming ticks inside one
+    shard_map call (batched ingest).
+
+    Everything except sigma is replicated: the ScaleGate state, the
+    watermark frontiers and the EpochState tables are identical on every
+    shard by construction (each shard runs the identical merge over the
+    identical replicated incoming tuples), so the paper's shared-TB contract
+    holds without any communication.  Returns
+
+        step(sg, epoch, sigma, inc_stack, fmu_new, active_new)
+          -> (sg, epoch, sigma, outs_pre, outs_post, switched[T])
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import elastic, scalegate
+
+    n_shards = mesh.shape[axis]
+    assert op.k_virt % n_shards == 0, (op.k_virt, n_shards)
+    rows = op.k_virt // n_shards
+    spec_sigma = mesh_state_spec(sigma_template, op.k_virt, axis)
+
+    def body(sg, epoch, sigma, inc_stack, fmu_new, active_new):
+        j = jax.lax.axis_index(axis)
+        tick_l = make_local_tick(j * rows, rows)
+
+        def scan_body(carry, incoming):
+            sg, epoch, sigma = carry
+            sg, ready = scalegate.push(sg, incoming)
+            epoch = elastic.prepare_reconfig(epoch, ready, fmu_new,
+                                             active_new)
+            pre, post = elastic.split_epoch_masks(epoch, ready)
+
+            ready_pre = dataclasses.replace(
+                ready, valid=pre | (ready.is_control & ready.valid))
+            sigma, outs1 = tick_l(sigma, ready_pre)
+
+            live = ready.valid & ~ready.is_control
+            w_end = jnp.max(jnp.where(live, ready.tau, 0))
+            epoch, switched = elastic.advance_epoch(epoch, w_end)
+
+            ready_post = dataclasses.replace(ready, valid=post)
+            sigma, outs2 = tick_l(sigma, ready_post)
+            return (sg, epoch, sigma), (outs1, outs2, switched)
+
+        (sg, epoch, sigma), (o1, o2, sw) = jax.lax.scan(
+            scan_body, (sg, epoch, sigma), inc_stack)
+        return sg, epoch, sigma, _lift_outs(o1), _lift_outs(o2), sw
+
+    def step(sg, epoch, sigma, inc_stack, fmu_new, active_new):
         return shard_map(
             body, mesh=mesh,
-            in_specs=(spec_state, P(), P(), P()),
-            out_specs=(spec_state, P(axis)),
+            in_specs=(P(), P(), spec_sigma, P(), P(), P()),
+            out_specs=(P(), P(), spec_sigma, _outs_spec(axis),
+                       _outs_spec(axis), P()),
             check_vma=False,
-        )(state, ready, fmu, active)
+        )(sg, epoch, sigma, inc_stack, fmu_new, active_new)
 
-    return sharded
+    return step

@@ -18,7 +18,6 @@ Usage:
 import argparse
 import functools
 import json
-import re
 import sys
 import time
 from typing import Optional
@@ -66,28 +65,9 @@ def input_specs(cfg: ModelConfig, shape: dict):
     return {"token": tok, "caches": caches, "states": states}
 
 
-COLLECTIVE_RE = re.compile(
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]", re.I)
-
-DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
-               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
-
-
-def collective_bytes(hlo_text: str):
-    """Sum output-shape bytes of every collective op in the compiled HLO."""
-    per_kind = {}
-    for m in COLLECTIVE_RE.finditer(hlo_text):
-        kind = m.group(1).lower().rstrip("-start")
-        dt = m.group(2)
-        dims = [int(x) for x in m.group(3).split(",") if x]
-        n = 1
-        for d in dims:
-            n *= d
-        b = n * DTYPE_BYTES.get(dt, 4)
-        per_kind[kind] = per_kind.get(kind, 0) + b
-    return per_kind
+# collective accounting shared with the streaming mesh runtime
+from repro.launch.mesh import (COLLECTIVE_RE, DTYPE_BYTES,  # noqa: F401
+                               collective_bytes)
 
 
 def build_step(cfg: ModelConfig, shape: dict, mesh, opt_cfg=None):

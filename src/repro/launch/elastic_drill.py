@@ -8,8 +8,17 @@ Demonstrates, end to end, on one host:
   3. a crash between checkpoints resumes from the last manifest.
 
     PYTHONPATH=src python -m repro.launch.elastic_drill
+
+``--mesh N`` additionally (or with ``--drills mesh``, exclusively) runs
+drill 1 on an N-device mesh: the epoch switch happens mid-stream on real
+devices, outputs stay identical to the single-device run, and the compiled
+step's HLO contains zero cross-device collectives — the measured
+cross-device state transfer is 0 bytes, vs the sigma bytes ``sn_transfer``
+would ship.  Emulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
+import argparse
 import sys
 
 import numpy as np
@@ -18,7 +27,7 @@ import jax
 from repro.core.aggregate import count_aggregate
 from repro.core.controller import Reconfiguration, active_mask, balanced_fmu
 from repro.core.elastic import vsn_switch_bytes
-from repro.core.runtime import VSNPipeline
+from repro.core.runtime import MeshPipeline, VSNPipeline
 from repro.core.windows import WindowSpec
 from repro.data import datagen
 
@@ -34,67 +43,112 @@ def collect(outs):
 
 
 def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="also run the straggler drill on an N-device mesh")
+    ap.add_argument("--drills", default="straggler,serving,crash",
+                    help="comma list of straggler,mesh,serving,crash")
+    args = ap.parse_args(argv)
+    drills = {d.strip() for d in args.drills.split(",")}
+    if args.mesh:
+        drills.add("mesh")
+
     k = 64
     op = count_aggregate(WindowSpec(wa=50, ws=100, wt="multi"), k_virt=k,
                          out_cap=512)
 
-    def run(drain_straggler: bool):
+    def drain_reconfig():
+        # instance 2 is slow: remap its keys to the others.  No
+        # sigma row moves; only the f_mu table changes.
+        fmu = balanced_fmu(k, 3, 8)
+        fmu = np.where(fmu >= 2, fmu + 1, fmu).astype(np.int32)
+        active = active_mask(4, 8)
+        active[2] = False
+        return Reconfiguration(epoch=1, n_active=3, fmu=fmu, active=active)
+
+    def stream():
         rng = np.random.default_rng(0)
+        return datagen.tweets(rng, n_ticks=6, tick=32, words_per_tweet=3,
+                              vocab=500, k_virt=k, rate_per_tick=30)
+
+    def run(drain_straggler: bool):
         pipe = VSNPipeline(op, n_max=8, n_active=4, stash_cap=64)
         outs = []
-        for i, b in enumerate(datagen.tweets(
-                rng, n_ticks=6, tick=32, words_per_tweet=3, vocab=500,
-                k_virt=k, rate_per_tick=30)):
-            rc = None
-            if drain_straggler and i == 2:
-                # instance 2 is slow: remap its keys to the others.  No
-                # sigma row moves; only the f_mu table changes.
-                fmu = balanced_fmu(k, 3, 8)
-                fmu = np.where(fmu >= 2, fmu + 1, fmu).astype(np.int32)
-                active = active_mask(4, 8)
-                active[2] = False
-                rc = Reconfiguration(epoch=1, n_active=3, fmu=fmu,
-                                     active=active)
+        for i, b in enumerate(stream()):
+            rc = drain_reconfig() if drain_straggler and i == 2 else None
             o1, o2, sw = pipe.step(b, reconfig=rc)
             outs += collect(o1) + collect(o2)
         return outs, pipe
 
-    base, _ = run(False)
-    drained, pipe = run(True)
-    same = base == drained
-    print(f"[1] straggler drain: outputs identical={same}, "
-          f"switch bytes={vsn_switch_bytes(pipe.epoch)} "
-          f"(vs sigma = {sum(l.nbytes for l in jax.tree.leaves(pipe.sigma))}"
-          f" bytes that SN would reshard)")
-    assert same
+    base = None
+    if "straggler" in drills or "mesh" in drills:
+        base, _ = run(False)
+    if "straggler" in drills:
+        drained, pipe = run(True)
+        same = base == drained
+        print(f"[1] straggler drain: outputs identical={same}, "
+              f"switch bytes={vsn_switch_bytes(pipe.epoch)} "
+              f"(vs sigma = {sum(l.nbytes for l in jax.tree.leaves(pipe.sigma))}"
+              f" bytes that SN would reshard)")
+        assert same
+
+    if "mesh" in drills:
+        n = args.mesh or min(len(jax.devices()), 8)
+        if len(jax.devices()) < n:
+            print(f"[1m] mesh drill SKIP: needs {n} devices, have "
+                  f"{len(jax.devices())} (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={n})")
+        else:
+            from repro.launch.mesh import make_stream_mesh
+            pipe = MeshPipeline(op, make_stream_mesh(n), stash_cap=64,
+                                mode="general", n_max=8, n_active=4)
+            outs = []
+            for i, b in enumerate(stream()):
+                rc = drain_reconfig() if i == 2 else None
+                o1, o2, sw = pipe.step(b, reconfig=rc)
+                outs += collect(o1) + collect(o2)
+            same = sorted(outs) == sorted(base)
+            coll = pipe.collective_bytes()
+            sigma_bytes = sum(l.nbytes for l in jax.tree.leaves(pipe.sigma))
+            print(f"[1m] mesh straggler drain on {n} devices: outputs "
+                  f"identical={same}, reconfigs={int(pipe.epoch.reconfigs)}, "
+                  f"cross-device state transfer={sum(coll.values())} B "
+                  f"(HLO collectives: {coll or 'none'}), switch "
+                  f"bytes={pipe.switch_bytes()} (tables) vs {sigma_bytes} B "
+                  f"of sigma that SN would reshard")
+            assert same, "mesh run diverged from single-device oracle"
+            assert int(pipe.epoch.reconfigs) == 1
+            assert sum(coll.values()) == 0, "state moved between devices"
 
     # --- serving pool ------------------------------------------------------
-    from repro.configs import get_config, reduced
-    from repro.models import transformer
-    from repro.serving.kv_pool import Request, ServingEngine
-    cfg = reduced(get_config("qwen3_14b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, n_slots=4, max_seq=64, n_instances=4)
-    eng.submit(Request(uid=0, prompt=np.asarray([5, 6, 7]), max_new=4,
-                       arrived=0))
-    eng.tick()
-    v = eng.pool.reconfigure_vsn(2)
-    s = eng.pool.reconfigure_sn(4)
-    print(f"[2] serving scale 4->2->4: VSN moved {v} B (tables), "
-          f"SN baseline moved {s} B of KV")
-    assert s > 10 * v
+    if "serving" in drills:
+        from repro.configs import get_config, reduced
+        from repro.models import transformer
+        from repro.serving.kv_pool import Request, ServingEngine
+        cfg = reduced(get_config("qwen3_14b"))
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServingEngine(cfg, params, n_slots=4, max_seq=64, n_instances=4)
+        eng.submit(Request(uid=0, prompt=np.asarray([5, 6, 7]), max_new=4,
+                           arrived=0))
+        eng.tick()
+        v = eng.pool.reconfigure_vsn(2)
+        s = eng.pool.reconfigure_sn(4)
+        print(f"[2] serving scale 4->2->4: VSN moved {v} B (tables), "
+              f"SN baseline moved {s} B of KV")
+        assert s > 10 * v
 
     # --- crash/resume ------------------------------------------------------
-    import tempfile
-    from repro.checkpoint import checkpoint as C
-    with tempfile.TemporaryDirectory() as d:
-        C.save(d, 10, {"w": np.ones(4)}, async_=False)
-        import os
-        os.makedirs(os.path.join(d, "step_00000011"))   # crashed save
-        step = C.latest_step(d)
-        print(f"[3] crash drill: latest complete step = {step} (11 is "
-              f"invisible)")
-        assert step == 10
+    if "crash" in drills:
+        import tempfile
+        from repro.checkpoint import checkpoint as C
+        with tempfile.TemporaryDirectory() as d:
+            C.save(d, 10, {"w": np.ones(4)}, async_=False)
+            import os
+            os.makedirs(os.path.join(d, "step_00000011"))   # crashed save
+            step = C.latest_step(d)
+            print(f"[3] crash drill: latest complete step = {step} (11 is "
+                  f"invisible)")
+            assert step == 10
     print("elastic drill OK")
     return 0
 

@@ -1,0 +1,209 @@
+"""Mesh VSN runtime: exact output-set parity between 1-device and n-device
+execution over the same tuple stream — including across a mid-stream
+reconfiguration — with zero cross-device state transfer (the ISSUE-2 /
+paper-§8.4 acceptance contract).
+
+The n-way cases need n visible devices; the ``multi-device`` CI job
+provides them via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+set before the first jax import.  On a bare host the 8-way cases skip and
+the 1-way mesh (shard_map plumbing with n_shards=1) still runs.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import collect_outputs
+from repro.core import vsn
+from repro.core.aggregate import count_aggregate, fast_init
+from repro.core.controller import Reconfiguration, active_mask, balanced_fmu
+from repro.core.join import band_predicate, fast_join_init
+from repro.core.join import tick_fast as join_fast
+from repro.core.runtime import MeshPipeline, VSNPipeline
+from repro.core.windows import WindowSpec
+from repro.data import datagen
+from repro.launch.mesh import collective_bytes, make_stream_mesh
+
+K = 64
+WS = WindowSpec(wa=50, ws=100, wt="multi")
+
+N_DEV = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEV < 8, reason="needs 8 devices (XLA_FLAGS="
+                      "--xla_force_host_platform_device_count=8)")
+
+
+def op():
+    return count_aggregate(WS, k_virt=K, out_cap=512, extra_slots=2)
+
+
+def stream(n_ticks=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return list(datagen.tweets(rng, n_ticks=n_ticks, tick=16,
+                               words_per_tweet=3, vocab=500, k_virt=K,
+                               rate_per_tick=30))
+
+
+def reconfig():
+    fmu = balanced_fmu(K, 3, 8)
+    fmu = np.where(fmu >= 2, fmu + 1, fmu).astype(np.int32)
+    active = active_mask(4, 8)
+    active[2] = False
+    return Reconfiguration(epoch=1, n_active=3, fmu=fmu, active=active)
+
+
+def host_oracle(batches, rc_at=None):
+    pipe = VSNPipeline(op(), n_max=8, n_active=4, stash_cap=64)
+    outs = []
+    for i, b in enumerate(batches):
+        o1, o2, _ = pipe.step(b, reconfig=reconfig() if i == rc_at else None)
+        outs += collect_outputs(o1) + collect_outputs(o2)
+    return sorted(outs), pipe
+
+
+def mesh_run(batches, n_shards, mode, rc_at=None, batched=False):
+    pipe = MeshPipeline(op(), make_stream_mesh(n_shards), stash_cap=64,
+                        mode=mode, n_max=8, n_active=4)
+    outs = []
+    if batched:
+        o1, o2, sw = pipe.run(batches, reconfig=(reconfig() if rc_at
+                                                 is not None else None),
+                              reconfig_at=rc_at or 0)
+        outs += collect_outputs(o1) + collect_outputs(o2)
+        switched = int(np.asarray(sw).sum())
+    else:
+        switched = 0
+        for i, b in enumerate(batches):
+            o1, o2, sw = pipe.step(
+                b, reconfig=reconfig() if i == rc_at else None)
+            outs += collect_outputs(o1) + collect_outputs(o2)
+            switched += int(np.asarray(sw).sum())
+    return sorted(outs), switched, pipe
+
+
+def test_mesh1_matches_host_pipeline():
+    """shard_map plumbing on a 1-device mesh == the vmap host executor."""
+    batches = stream()
+    oracle, _ = host_oracle(batches)
+    assert oracle
+    got, _, pipe = mesh_run(batches, 1, "general")
+    assert got == oracle
+    assert sum(pipe.collective_bytes().values()) == 0
+
+
+def test_mesh1_fast_agg_and_batched_ingest():
+    batches = stream()
+    oracle, _ = host_oracle(batches)
+    got, _, _ = mesh_run(batches, 1, "fast-agg")
+    assert got == oracle
+    got_b, _, _ = mesh_run(batches, 1, "fast-agg", batched=True)
+    assert got_b == oracle
+
+
+@needs8
+@pytest.mark.parametrize("mode", ["general", "fast-agg"])
+def test_mesh8_parity(mode):
+    """Identical sorted output tuples for 1-device vs 8-device runs."""
+    batches = stream()
+    one, _, _ = mesh_run(batches, 1, mode)
+    eight, _, pipe = mesh_run(batches, 8, mode)
+    assert one == eight
+    assert sum(pipe.collective_bytes().values()) == 0
+
+
+@needs8
+@pytest.mark.parametrize("batched", [False, True])
+def test_mesh8_reconfig_zero_transfer(batched):
+    """The acceptance gate: 8-way parity across a mid-stream f_mu switch
+    with measured cross-device state transfer of 0 bytes."""
+    batches = stream(n_ticks=6)
+    oracle, hp = host_oracle(batches, rc_at=2)
+    got, switched, pipe = mesh_run(batches, 8, "general", rc_at=2,
+                                   batched=batched)
+    assert got == oracle
+    assert switched == 1 and int(pipe.epoch.reconfigs) == 1
+    # zero bytes crossed devices (every compiled step variant's HLO)
+    assert pipe.collective_bytes() == {}
+    # the switch itself moved only the replicated tables (vsn_switch_bytes)
+    assert pipe.switch_bytes() == 4 * K + 8 + 12
+    # ... while the SN baseline's sn_transfer ships sigma rows for the
+    # very same reconfiguration (the Fig. 9 story)
+    from repro.core.runtime import SNPipeline
+    sn = SNPipeline(op(), n_max=8, n_active=4, stash_cap=64)
+    for i, b in enumerate(batches):
+        sn.step(b, reconfig=reconfig() if i == 2 else None)
+    assert sn.bytes_transferred > 0
+
+
+@needs8
+def test_mesh8_batched_equals_per_tick():
+    """Batched multi-tick ingest (scan inside one shard_map call) produces
+    exactly the per-tick outputs."""
+    batches = stream(n_ticks=6)
+    per_tick, _, _ = mesh_run(batches, 8, "fast-agg")
+    batched, _, _ = mesh_run(batches, 8, "fast-agg", batched=True)
+    assert per_tick == batched
+
+
+# --------------------------------------------------------------- join -----
+
+JWS = WindowSpec(wa=1, ws=5000, wt="single")
+FJ = band_predicate(500.0, 2)
+
+
+def join_stream(n_ticks=5):
+    rng = np.random.default_rng(3)
+    return list(datagen.scalejoin(rng, n_ticks=n_ticks, tick=32, k_virt=1))
+
+
+def join_collect(outs):
+    tau = np.asarray(outs.tau).reshape(-1)
+    val = np.asarray(outs.valid).reshape(-1)
+    pay = np.asarray(outs.payload)
+    pay = pay.reshape(-1, pay.shape[-1])
+    return sorted((int(t), tuple(np.round(p, 3)))
+                  for t, p, ok in zip(tau, pay, val) if ok)
+
+
+def run_join_mesh(n_shards, batches):
+    mesh = make_stream_mesh(n_shards)
+    sigma = fast_join_init(K, 8, 4)
+    sigma = dataclasses.replace(
+        sigma, comparisons=jnp.zeros((n_shards,), jnp.float32))
+    sigma = vsn.mesh_device_put(sigma, mesh, "i", K)
+    step = jax.jit(vsn.shard_tick(
+        mesh, "i", K, vsn.join_local_tick(JWS, FJ, K, out_cap=2048), sigma))
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    sigma, outs = step(sigma, stack)
+    hlo = step.lower(sigma, stack).compile().as_text()
+    return join_collect(outs), np.asarray(sigma.comparisons), hlo
+
+
+def test_join_mesh1_matches_monolithic():
+    batches = join_stream()
+    st = fast_join_init(K, 8, 4)
+    resp = jnp.ones((K,), bool)
+    oracle, comps = [], 0.0
+    for b in batches:
+        st, outs = join_fast(JWS, FJ, st, b, resp, out_cap=2048)
+        oracle += join_collect(outs)
+        comps += float(st.comparisons)
+    got, comps_mesh, _ = run_join_mesh(1, batches)
+    assert sorted(oracle) == got
+    assert comps_mesh.sum() == pytest.approx(comps)
+
+
+@needs8
+def test_join_mesh8_parity_and_work_partition():
+    """q3-style join stream: 1-shard vs 8-shard output parity; comparisons
+    partition exactly (Pi-invariant total) with zero collectives."""
+    batches = join_stream()
+    one, comps1, _ = run_join_mesh(1, batches)
+    eight, comps8, hlo = run_join_mesh(8, batches)
+    assert one == eight
+    assert comps8.sum() == pytest.approx(comps1.sum())
+    assert (comps8 > 0).all()          # every shard did a share of the work
+    assert collective_bytes(hlo) == {}

@@ -1,0 +1,100 @@
+"""tick_fast (vectorized aggregate) vs the general O+ tick: output-emission
+parity on extra_slots configs (ROADMAP item, ISSUE 2 satellite).
+
+Intended semantics pinned here:
+
+* ``f_MK`` returns a key *set* (Definition 4): a key repeated inside one
+  tuple's KMAX-padded key array contributes exactly once.  The general path
+  always honored this (union of one-hots); tick_fast's per-column scatter
+  used to double-count duplicates for additive reducers — the fast path was
+  wrong and is fixed by masking earlier-column duplicates.
+* With a collision-free slot ring (``extra_slots`` large enough for the
+  tick's window span) the two paths agree *exactly* — state, accumulators,
+  and emitted outputs.  Ring overruns are counted in ``collisions`` and are
+  the only licensed divergence.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import collect_outputs
+from repro.core import tuples as T
+from repro.core.aggregate import (count_aggregate, fast_init,
+                                  longest_aggregate, tick_fast)
+from repro.core.operator import tick as gen_tick
+from repro.core.windows import WindowSpec
+
+K = 8
+
+
+def drive_both(op, kind, batches):
+    op = op.resolved()
+    resp = jnp.ones((K,), bool)
+    st_g = op.init_state()
+    st_f = fast_init(op)
+    out_g, out_f, colls = [], [], 0
+    for b in batches:
+        st_g, o = gen_tick(op, st_g, b, resp)
+        out_g += collect_outputs(o)
+        st_f, o = tick_fast(op, kind, st_f, b, resp)
+        out_f += collect_outputs(o)
+        colls += int(st_f.collisions)
+    return out_g, out_f, colls, st_g, st_f
+
+
+def test_duplicate_keys_count_once():
+    """Definition 4: the key set {4, 4} is the set {4}."""
+    op = count_aggregate(WindowSpec(wa=10, ws=20, wt="multi"), k_virt=K,
+                         out_cap=128, extra_slots=2)
+    b1 = T.make_batch(jnp.asarray([5]), jnp.zeros((1, 1)),
+                      keys=jnp.asarray([[4, 4]]), kmax=2)
+    flush = T.make_batch(jnp.asarray([25]), jnp.zeros((1, 1)),
+                         keys=jnp.asarray([[-1, -1]]), kmax=2)
+    out_g, out_f, colls, _, _ = drive_both(op, "count", [b1, flush])
+    assert colls == 0
+    assert out_g == out_f
+    # both windows containing tau=5 report count 1, not 2
+    assert sorted(out_g) == [(10, (4.0, 1.0)), (20, (4.0, 1.0))]
+
+
+@pytest.mark.parametrize("extra_slots", [1, 2, 3])
+@pytest.mark.parametrize("kind,maker", [("count", count_aggregate),
+                                        ("max", longest_aggregate)])
+def test_three_tick_stream_parity(extra_slots, kind, maker):
+    """The ROADMAP repro: drive both paths over the same 3-tick stream with
+    multi-key sets (duplicates included) and padded lanes; collision-free
+    configs must agree exactly on state AND emission."""
+    op = maker(WindowSpec(wa=10, ws=20, wt="multi"), k_virt=K, out_cap=512,
+               extra_slots=extra_slots)
+    rng = np.random.default_rng(extra_slots)
+    batches, tau0 = [], 0
+    for _ in range(3):
+        taus = np.sort(tau0 + rng.integers(0, 8, 10)).astype(np.int32)
+        tau0 = int(taus.max()) + 1
+        keys = rng.integers(0, K, (10, 3)).astype(np.int32)
+        keys[rng.random((10, 3)) < 0.25] = -1
+        valid = rng.random(10) > 0.15
+        pay = rng.uniform(0, 5, (10, 1)).astype(np.float32)
+        batches.append(T.make_batch(jnp.asarray(taus), jnp.asarray(pay),
+                                    keys=jnp.asarray(keys),
+                                    valid=jnp.asarray(valid), kmax=3))
+    out_g, out_f, colls, st_g, st_f = drive_both(op, kind, batches)
+    assert colls == 0, "test stream must stay within the slot ring"
+    assert out_g == out_f
+    np.testing.assert_allclose(np.asarray(st_g.zeta["acc"]),
+                               np.asarray(st_f.op_state.zeta["acc"]))
+    assert int(st_g.next_l) == int(st_f.op_state.next_l)
+    assert int(st_g.watermark) == int(st_f.op_state.watermark)
+
+
+def test_ring_overrun_is_counted_never_silent():
+    """With extra_slots=0 a wide tick overruns the ring: divergence is
+    licensed but must be visible in the collisions counter."""
+    op = count_aggregate(WindowSpec(wa=10, ws=20, wt="multi"), k_virt=K,
+                         out_cap=512, extra_slots=0)
+    taus = jnp.asarray([0, 15, 35], jnp.int32)   # spans 5 generations
+    b = T.make_batch(taus, jnp.zeros((3, 1)),
+                     keys=jnp.asarray([[0], [1], [2]]), kmax=1)
+    _, _, colls, _, _ = drive_both(op, "count", [b])
+    assert colls > 0
