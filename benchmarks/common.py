@@ -9,17 +9,31 @@ import jax
 
 ROWS = []
 
+CSV_HEADER = ["name", "us_per_call", "derived", "p50_ms", "p99_ms",
+              "detect_switch_ms"]
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         p50_ms: float = None, p99_ms: float = None,
+         detect_switch_ms: float = None):
+    """One result row.  The optional latency columns (tick-latency p50/p99
+    and detection→switch latency, all ms) come from the live-runtime
+    variants; plain rows leave them empty in the CSV."""
+    ROWS.append((name, us_per_call, derived, p50_ms, p99_ms,
+                 detect_switch_ms))
+    extra = "".join(
+        f",{k}={v:.2f}" for k, v in [("p50_ms", p50_ms), ("p99_ms", p99_ms),
+                                     ("d2s_ms", detect_switch_ms)]
+        if v is not None)
+    print(f"{name},{us_per_call:.1f},{derived}{extra}", flush=True)
 
 
 def failed_rows():
     """Rows that signal a failure: a FAIL marker in the name or derived
     column (e.g. ``outputs_match_static=False``).  SKIP rows don't count."""
     bad = []
-    for name, us, derived in ROWS:
+    for row in ROWS:
+        name, us, derived = row[0], row[1], row[2]
         text = f"{name} {derived}"
         if "FAIL" in text or "=False" in text:
             bad.append((name, us, derived))
@@ -31,9 +45,11 @@ def write_csv(path: str):
 
     with open(path, "w", newline="") as f:
         w = csv.writer(f)   # quotes the comma-laden derived column
-        w.writerow(["name", "us_per_call", "derived"])
-        for name, us, derived in ROWS:
-            w.writerow([name, f"{us:.1f}", derived])
+        w.writerow(CSV_HEADER)
+        for name, us, derived, p50, p99, d2s in ROWS:
+            w.writerow([name, f"{us:.1f}", derived]
+                       + [("" if v is None else f"{v:.3f}")
+                          for v in (p50, p99, d2s)])
 
 
 def time_fn(fn, *args, warmup=2, iters=5):

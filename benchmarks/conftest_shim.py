@@ -1,18 +1,7 @@
 """Output-collection helper shared with tests (no pytest dependency)."""
 
-import numpy as np
+from repro.io.sinks import flatten_outputs
 
 
 def collect_outputs(outs):
-    res = []
-    tau = np.asarray(outs.tau)
-    pay = np.asarray(outs.payload)
-    val = np.asarray(outs.valid)
-    if tau.ndim == 2:
-        for j in range(tau.shape[0]):
-            res += [(int(t), tuple(np.round(p, 4))) for t, p, ok in
-                    zip(tau[j], pay[j], val[j]) if ok]
-    else:
-        res += [(int(t), tuple(np.round(p, 4))) for t, p, ok in
-                zip(tau, pay, val) if ok]
-    return sorted(res)
+    return sorted(flatten_outputs(outs))

@@ -6,7 +6,14 @@ max-width run).
 ``--mesh N``: the elastic pipeline additionally runs on an N-device mesh
 (MeshPipeline) under the same reconfiguration trace — every f_mu switch is
 a replicated-table swap, zero state rows move between devices, and the
-output set must still match the static oracle exactly."""
+output set must still match the static oracle exactly.
+
+``--async``: the same abrupt rate trace through the live closed loop
+(AsyncStreamRuntime + PredictiveController.observe_live): the controller
+is fed per-tick MetricsBus snapshots, its reconfigurations are injected
+mid-stream through the control-tuple path, and the row reports tick
+latency p50/p99, detection→switch latency, and exact output parity with
+the static oracle (a FAIL row if the live elastic run diverges)."""
 
 import time
 
@@ -24,7 +31,7 @@ K_VIRT = 256
 WS = WindowSpec(wa=500, ws=1000, wt="multi")
 
 
-def main(mesh: int = 0):
+def main(mesh: int = 0, async_: bool = False):
     rng = np.random.default_rng(5)
     op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2)
     ctl = PredictiveController(n_max=32, k_virt=K_VIRT,
@@ -88,9 +95,37 @@ def main(mesh: int = 0):
         assert ok_m, "mesh elastic run diverged from static oracle"
         assert coll == 0, "mesh step moved state between devices"
 
+    if async_:
+        from repro.core.async_runtime import AsyncStreamRuntime
+        from repro.io import RateSchedule, ReplaySource
+
+        batches = [b for b, _ in replay]
+        sched = RateSchedule(tuple((3, float(r)) for r in phases))
+        live_ctl = PredictiveController(n_max=32, k_virt=K_VIRT,
+                                        comparisons_per_s_per_instance=3e6,
+                                        ws_seconds=1.0, n_active=2)
+        live_pipe = VSNPipeline(op, n_max=32, n_active=2, stash_cap=256)
+        rt = AsyncStreamRuntime(live_pipe,
+                                ReplaySource(batches, schedule=sched),
+                                controller=live_ctl, queue_cap=4)
+        rep = rt.run()
+        ok_l = rt.sink.results() == sorted(outs_s)
+        d2s = (float(np.mean(rep.detect_to_switch_ms))
+               if rep.detect_to_switch_ms else None)
+        pis = [rc.n_active for _, rc in rep.reconfig_trace] or [2]
+        emit("q5_live_loop", 1e6 / max(rep.throughput_tps, 1e-9),
+             f"{rep.throughput_tps:.0f} t/s, "
+             f"{len(rep.reconfig_trace)} live reconfigs "
+             f"({rep.switches} switched, pi {min(pis)}..{max(pis)}), "
+             f"outputs_match_static={ok_l}",
+             p50_ms=rep.p50_ms, p99_ms=rep.p99_ms, detect_switch_ms=d2s)
+        assert ok_l, "live elastic run diverged from static oracle"
+
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", type=int, default=0)
-    main(mesh=ap.parse_args().mesh)
+    ap.add_argument("--async", dest="async_", action="store_true")
+    a = ap.parse_args()
+    main(mesh=a.mesh, async_=a.async_)

@@ -36,6 +36,11 @@ def main(argv=None) -> None:
                     help="run mesh variants over N devices where a bench "
                          "supports it (emulate with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="run live-runtime async variants where a bench "
+                         "supports them (q1/q3/q5: AsyncStreamRuntime "
+                         "overlap gain, tick-latency quantiles, "
+                         "detection→switch latency, async-vs-sync parity)")
     ap.add_argument("--csv", default=None,
                     help="also write the result rows to this CSV file "
                          "(CI uploads it as a workflow artifact)")
@@ -44,7 +49,7 @@ def main(argv=None) -> None:
     from repro.kernels import dispatch
     dispatch.set_default_backend(args.backend)
     print(f"# backend={dispatch.default_backend()}", flush=True)
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived[,latency columns]")
     from benchmarks import common
     from benchmarks import (kernels_bench, q1_wordcount, q2_forward,
                             q3_scalejoin, q4_reconfig, q5_elastic_stress,
@@ -61,8 +66,12 @@ def main(argv=None) -> None:
         mods = tuple(m for m in mods if m.__name__.split(".")[-1] in keep)
     ok = True
     for mod in mods:
-        kw = ({"mesh": args.mesh}
-              if "mesh" in inspect.signature(mod.main).parameters else {})
+        params = inspect.signature(mod.main).parameters
+        kw = {}
+        if "mesh" in params:
+            kw["mesh"] = args.mesh
+        if "async_" in params:
+            kw["async_"] = args.async_
         try:
             mod.main(**kw)
         except Exception:

@@ -1,0 +1,345 @@
+"""AsyncStreamRuntime: live double-buffered ingest + closed-loop elasticity.
+
+The batch drivers (benchmarks, tests) pre-stage whole streams and pay a
+host round-trip per tick.  This runtime makes the stream *live*:
+
+* an **ingest thread** pulls ticks from an ``io`` source, computes the tiny
+  host-side tick metadata (per-source frontier, tuple count, key
+  histogram), and ``stage``s the batch onto the device — so the
+  ``device_put`` of tick T+1 runs concurrently with device compute of
+  tick T.  A ``BoundedQueue`` between the threads applies backpressure:
+  the producer blocks, memory never grows past ``queue_cap`` ticks;
+* the **step loop** dispatches the compiled ``VSNPipeline`` /
+  ``MeshPipeline`` step on the staged batch and *never* blocks on the
+  outputs (sinks keep device handles).  The only host syncs are the
+  sampled metrics of the *previous* tick — the ``switched`` flag and the
+  per-instance load vector — fetched while the current tick computes
+  (double buffering);
+* the **control loop** closes §8.4-§8.5: each tick, a ``MetricsBus``
+  snapshot (offered/measured rate, per-instance load, queue depth) is fed
+  to the controller, and an emitted ``Reconfiguration`` is injected
+  mid-stream through the existing control-tuple path (Alg. 5), stamped
+  from the *host-tracked* per-source frontier so no device readback stalls
+  the loop.  Detection→switch latency (decision wall-clock to the first
+  observed epoch switch) is measured per reconfiguration.
+
+``run_sync`` is the measured baseline: the same semantics as a plain
+host loop (generate, step, block on outputs), so async-vs-sync throughput
+isolates the overlap gain and async-vs-sync output sets pin correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import tuples as T
+from repro.core.controller import Reconfiguration
+from repro.core.runtime import fold_frontier
+from repro.io.metrics import MetricsBus
+from repro.io.queues import BoundedQueue
+from repro.io.sinks import CollectSink
+
+
+@dataclasses.dataclass
+class TickMeta:
+    """Host-side facts about one tick, computed in the ingest thread."""
+    tick_id: int
+    n_tuples: int                  # valid data lanes
+    frontier_before: np.ndarray    # i64[n_inputs] last tau per source BEFORE
+    key_hist: Optional[np.ndarray]  # i64[k_virt] (lane, key) routing counts
+
+
+@dataclasses.dataclass
+class StagedTick:
+    meta: TickMeta
+    staged: T.TupleBatch           # device-resident
+
+
+@dataclasses.dataclass
+class RunReport:
+    ticks: int
+    tuples: int
+    wall_s: float
+    throughput_tps: float
+    p50_ms: float
+    p99_ms: float
+    queue_high_water: int
+    blocked_puts: int
+    reconfig_trace: List[Tuple[int, Reconfiguration]]
+    switches: int
+    detect_to_switch_ms: List[float]
+    detect_to_switch_ticks: List[int]
+
+    def summary(self) -> str:
+        d2s = (f"{np.mean(self.detect_to_switch_ms):.1f}ms"
+               f"/{np.mean(self.detect_to_switch_ticks):.1f}t"
+               if self.detect_to_switch_ms else "n/a")
+        return (f"{self.ticks} ticks, {self.tuples} tuples in "
+                f"{self.wall_s:.2f}s = {self.throughput_tps:.0f} t/s; "
+                f"tick latency p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms; "
+                f"{len(self.reconfig_trace)} reconfigs ({self.switches} "
+                f"switched, detection->switch {d2s}); queue high-water "
+                f"{self.queue_high_water}")
+
+
+def _initial_frontier(pipeline, n_inputs: int) -> np.ndarray:
+    """Seed the host-tracked frontier from the pipeline's ScaleGate state:
+    a pre-warmed pipeline (e.g. a compile tick stepped before run()) has
+    already forwarded taus, and control tuples stamped below them would
+    violate the per-source sorted-stream invariant (Alg. 5).  Runs before
+    the stream starts, so the device read cannot stall an in-flight step."""
+    if getattr(pipeline, "_sg_ready", False):
+        return np.asarray(pipeline.sg.wmark.frontier).astype(np.int64).copy()
+    return np.zeros((n_inputs,), np.int64)
+
+
+def make_report(metrics: MetricsBus, reconfig_trace, switches: int,
+                queue=None) -> RunReport:
+    """Assemble the RunReport from a finished run's metrics (shared by the
+    async loop and the run_sync baseline)."""
+    p50, p99 = metrics.latency_quantiles_ms()
+    return RunReport(
+        ticks=len(metrics.records),
+        tuples=metrics.total_tuples,
+        wall_s=(metrics.t_end or 0.0) - (metrics.t_start or 0.0),
+        throughput_tps=metrics.throughput_tps(),
+        p50_ms=p50, p99_ms=p99,
+        queue_high_water=0 if queue is None else queue.high_water,
+        blocked_puts=0 if queue is None else queue.blocked_puts,
+        reconfig_trace=list(reconfig_trace),
+        switches=switches,
+        detect_to_switch_ms=list(metrics.detect_to_switch_ms),
+        detect_to_switch_ticks=list(metrics.detect_to_switch_ticks))
+
+
+def tick_meta(b: T.TupleBatch, tick_id: int, n_inputs: int, k_virt: int,
+              frontier: np.ndarray, with_hist: bool = True) -> TickMeta:
+    """Compute a tick's metadata and fold its taus into the running
+    ``frontier`` (mutated) — numpy views only, no device work.
+
+    ``with_hist=False`` skips the O(B*KMAX) key histogram: it is only
+    consumed by the host-side load fallback for pipelines whose step does
+    not return a device ``inst_load`` (MeshPipeline), and the ingest
+    thread should stay as light as possible."""
+    ok = np.asarray(b.valid) & ~np.asarray(b.is_control)
+    before = frontier.copy()
+    fold_frontier(frontier, b, n_inputs)
+    hist = None
+    if with_hist:
+        keys = np.asarray(b.keys)
+        km = ok[:, None] & (keys >= 0)
+        if km.any():
+            hist = np.bincount(keys[km].ravel(),
+                               minlength=k_virt).astype(np.int64)
+        else:
+            hist = np.zeros((k_virt,), np.int64)
+    return TickMeta(tick_id, int(ok.sum()), before, hist)
+
+
+class AsyncStreamRuntime:
+    """Drive a pipeline from a live source with overlapped ingest and a
+    controller in the loop.  ``pipeline`` must expose ``stage`` and
+    ``step_staged`` (VSNPipeline and MeshPipeline do)."""
+
+    def __init__(self, pipeline, source, sink=None, controller=None,
+                 queue_cap: int = 4, metrics: Optional[MetricsBus] = None):
+        self.pipeline = pipeline
+        self.source = source
+        self.sink = sink if sink is not None else CollectSink()
+        self.controller = controller
+        self.queue = BoundedQueue(queue_cap)
+        self.metrics = metrics or MetricsBus(queue_cap=queue_cap)
+        # a caller-supplied bus must still know the in-flight cap, or the
+        # controllers' queue-pressure term silently never fires
+        self.metrics.queue_cap = self.metrics.queue_cap or queue_cap
+        self.reconfig_trace: List[Tuple[int, Reconfiguration]] = []
+        self.switches = 0
+        # host shadows of the COMMITTED epoch tables (mesh load fallback +
+        # the n_active a load sample is judged under); read once before the
+        # stream starts, so no in-flight sync.  Pending (injected but not
+        # yet switched) reconfigurations live in the MetricsBus, which
+        # hands back what a switch committed.
+        self._fmu_shadow = np.asarray(pipeline.epoch.fmu).copy()
+        self._active_shadow = np.asarray(pipeline.epoch.active).copy()
+        self._ingest_error: Optional[BaseException] = None
+
+    # -- ingest thread ------------------------------------------------------
+    def _ingest(self, max_ticks: Optional[int]):
+        n_inputs = self.pipeline.op.n_inputs
+        k_virt = self.pipeline.op.k_virt
+        # the key histogram is only needed for the host-side load fallback
+        # (pipelines whose step doesn't return a device inst_load)
+        with_hist = not getattr(self.pipeline, "device_inst_load", False)
+        frontier = _initial_frontier(self.pipeline, n_inputs)
+        try:
+            for tick_id, b in enumerate(self.source):
+                if max_ticks is not None and tick_id >= max_ticks:
+                    break
+                meta = tick_meta(b, tick_id, n_inputs, k_virt, frontier,
+                                 with_hist=with_hist)
+                staged = self.pipeline.stage(b)   # async transfer
+                self.queue.put(StagedTick(meta, staged))
+        except BaseException as e:              # surfaced after join()
+            self._ingest_error = e
+        finally:
+            self.queue.close()
+
+    # -- metric sampling ----------------------------------------------------
+    def _host_inst_load(self, key_hist) -> Optional[np.ndarray]:
+        if key_hist is None:
+            return None
+        n_max = self._active_shadow.shape[0]
+        return np.bincount(self._fmu_shadow, weights=key_hist,
+                           minlength=n_max).astype(np.int64)
+
+    def _drain(self, pending, idle_s: float = 0.0):
+        """Fetch the sampled metrics of a completed tick (blocks only on the
+        scalar ``switched`` flag and the tiny per-instance load vector).
+        ``idle_s`` — time the loop spent waiting on the source for the NEXT
+        tick — is subtracted so a paced/starved source does not inflate the
+        reported tick latency."""
+        tick_id, switched, inst_load, meta, t_dispatch = pending
+        sw = bool(np.asarray(switched))
+        load = (np.asarray(inst_load) if inst_load is not None
+                else self._host_inst_load(meta.key_hist))
+        latency = max(time.perf_counter() - t_dispatch - idle_s, 0.0)
+        # record BEFORE updating the shadows: this tick's load was measured
+        # under the pre-switch tables, and the (inst_load, n_active) pair
+        # must stay consistent or the controller reads phantom skew.
+        self.metrics.record_tick(tick_id, meta.n_tuples, latency, load,
+                                 self.queue.depth,
+                                 n_active=int(self._active_shadow.sum()))
+        if sw:
+            self.switches += 1
+            # the switch commits the LATEST rc injected by this tick; any
+            # earlier ones it superseded are resolved with it.
+            resolved = self.metrics.record_switch(tick_id)
+            if resolved:
+                rc = resolved[-1]
+                self._fmu_shadow = np.asarray(rc.fmu).copy()
+                self._active_shadow = np.asarray(rc.active).copy()
+
+    def _decide(self, meta: TickMeta) -> Optional[Reconfiguration]:
+        if self.controller is None:
+            return None
+        hint = None
+        if hasattr(self.source, "rate_hint"):
+            hint = self.source.rate_hint(meta.tick_id)
+        if hint is None and len(self.metrics.records) < 2:
+            return None    # no rate signal yet: a measured rate of 0.0 at
+            # stream start would read as idle and trigger a bogus scale-down
+        snap = self.metrics.snapshot(
+            rate_hint=hint, queue_depth=self.queue.depth,
+            backlog_tuples=float(self.queue.depth * meta.n_tuples))
+        return self.controller.observe_live(snap)
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, max_ticks: Optional[int] = None) -> RunReport:
+        th = threading.Thread(target=self._ingest, args=(max_ticks,),
+                              daemon=True)
+        self.metrics.start()
+        th.start()
+        pending = None
+        try:
+            while True:
+                t_wait = time.perf_counter()
+                item = self.queue.get()
+                idle_s = time.perf_counter() - t_wait
+                if item is None:
+                    break
+                rc = self._decide(item.meta)
+                t0 = time.perf_counter()
+                o1, o2, switched, inst_load = self.pipeline.step_staged(
+                    item.staged, reconfig=rc,
+                    frontier=item.meta.frontier_before)
+                if rc is not None:
+                    self.reconfig_trace.append((item.meta.tick_id, rc))
+                    self.metrics.record_detection(rc.epoch,
+                                                  item.meta.tick_id, rc)
+                self.sink.accept(item.meta.tick_id, o1, o2)
+                if pending is not None:
+                    # tick T-1 syncs while T computes; the wait for T's
+                    # arrival was source idle time, not T-1's latency
+                    self._drain(pending, idle_s=idle_s)
+                pending = (item.meta.tick_id, switched, inst_load,
+                           item.meta, t0)
+            if pending is not None:
+                self._drain(pending)
+        finally:
+            # on error the ingest thread may be parked in put(); closing
+            # the queue releases it so nothing (thread or staged device
+            # buffers) outlives the run
+            self.queue.close()
+            self.metrics.stop()
+            th.join(timeout=30)
+        if self._ingest_error is not None:
+            raise self._ingest_error
+        return make_report(self.metrics, self.reconfig_trace, self.switches,
+                           queue=self.queue)
+
+
+def run_sync(pipeline, source, sink=None, controller=None,
+             max_ticks: Optional[int] = None,
+             reconfig_trace=None) -> Tuple[RunReport, Any]:
+    """The synchronous host-loop baseline: generate a tick, step, block on
+    the outputs, repeat.  Same semantics as the async loop (same control
+    tuples, same frontier stamps) minus every overlap — the reference both
+    for the throughput comparison and for output-set parity.
+
+    ``reconfig_trace`` replays a recorded ``[(tick_id, Reconfiguration)]``
+    (e.g. from an async run) instead of consulting ``controller``, so a
+    parity check can hold the reconfiguration sequence fixed.
+    """
+    sink = sink if sink is not None else CollectSink()
+    metrics = MetricsBus(queue_cap=0)
+    n_inputs = pipeline.op.n_inputs
+    k_virt = pipeline.op.k_virt
+    frontier = _initial_frontier(pipeline, n_inputs)
+    replay = dict(reconfig_trace) if reconfig_trace is not None else None
+    trace: List[Tuple[int, Reconfiguration]] = []
+    switches = 0
+    active_shadow = np.asarray(pipeline.epoch.active).copy()
+    metrics.start()
+    for tick_id, b in enumerate(source):
+        if max_ticks is not None and tick_id >= max_ticks:
+            break
+        meta = tick_meta(b, tick_id, n_inputs, k_virt, frontier,
+                         with_hist=False)
+        if replay is not None:
+            rc = replay.get(tick_id)
+        elif controller is not None:
+            hint = (source.rate_hint(tick_id)
+                    if hasattr(source, "rate_hint") else None)
+            if hint is None and len(metrics.records) < 2:
+                rc = None     # no rate signal yet (see _decide)
+            else:
+                rc = controller.observe_live(
+                    metrics.snapshot(rate_hint=hint))
+        else:
+            rc = None
+        t0 = time.perf_counter()
+        o1, o2, switched, inst_load = pipeline.step_staged(
+            b, reconfig=rc, frontier=meta.frontier_before)
+        if rc is not None:
+            trace.append((tick_id, rc))
+            metrics.record_detection(rc.epoch, tick_id, rc)
+        jax.block_until_ready((o1, o2))        # the synchronous host loop
+        sw = bool(np.asarray(switched))
+        load = None if inst_load is None else np.asarray(inst_load)
+        metrics.record_tick(tick_id, meta.n_tuples,
+                            time.perf_counter() - t0, load, 0,
+                            n_active=int(active_shadow.sum()))
+        if sw:
+            switches += 1
+            resolved = metrics.record_switch(tick_id)
+            if resolved:
+                active_shadow = np.asarray(resolved[-1].active).copy()
+        sink.accept(tick_id, o1, o2)
+    metrics.stop()
+    return make_report(metrics, trace, switches), sink

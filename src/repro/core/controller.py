@@ -30,6 +30,37 @@ class Reconfiguration:
     active: np.ndarray    # bool[n_max]
 
 
+@dataclasses.dataclass(frozen=True)
+class LiveMetrics:
+    """One tick's worth of runtime signals, as sampled by the live loop
+    (io.metrics.MetricsBus builds these).  This is the §3 'generic API for
+    external modules' made concrete: controllers never see the stream, only
+    this snapshot."""
+    rate_tps: float                          # offered/measured ingest rate
+    inst_load: Optional[np.ndarray] = None   # per-instance work last tick
+    n_active_observed: int = 0               # active count inst_load was
+    #                                          measured under (the COMMITTED
+    #                                          epoch, not a pending decision)
+    queue_depth: int = 0                     # staged ticks waiting (backlog)
+    queue_cap: int = 0
+    backlog_tuples: float = 0.0              # tuples sitting in the queue
+    tick_latency_s: float = 0.0
+
+    def load_skew(self, n_active: int = None) -> float:
+        """max/mean per-instance load (>= 1): a skewed f_mu saturates its
+        hottest instance before the average rate says so.  The mean is over
+        ``n_active`` instances when given (``inst_load`` spans all n_max
+        slots, inactive ones zero); else over the loaded ones."""
+        if self.inst_load is None:
+            return 1.0
+        load = np.asarray(self.inst_load, float)
+        total = load.sum()
+        if total <= 0:
+            return 1.0
+        n = n_active if n_active else int((load > 0).sum())
+        return float(load.max() * max(n, 1) / total)
+
+
 def balanced_fmu(k_virt: int, n_active: int, n_max: int) -> np.ndarray:
     """Round-robin key -> instance map over the active prefix (hash(k) % Pi,
     Operator 3 L4)."""
@@ -73,6 +104,21 @@ class ThresholdController:
             fmu=balanced_fmu(self.k_virt, desired, self.n_max),
             active=active_mask(desired, self.n_max))
 
+    def observe_live(self, m: LiveMetrics) -> Optional[Reconfiguration]:
+        """Closed-loop entry point: fold the live signals into an effective
+        rate, then apply the §8.4 thresholds.  Load skew inflates the rate
+        (the hottest instance saturates first) and a filling in-flight
+        queue signals the pipeline is already behind the offered rate."""
+        pressure = 1.0
+        if m.queue_cap > 0:
+            pressure += m.queue_depth / m.queue_cap
+        # skew must be judged against the active set the load was MEASURED
+        # under; self.n_active may already hold a not-yet-committed decision
+        # (a pending switch), and mixing the two inflates skew and cascades
+        # spurious scale-ups under a steady rate.
+        skew = m.load_skew(m.n_active_observed or None)
+        return self.observe(m.rate_tps * skew * pressure)
+
 
 @dataclasses.dataclass
 class PredictiveController:
@@ -110,3 +156,10 @@ class PredictiveController:
             epoch=self.epoch, n_active=desired,
             fmu=balanced_fmu(self.k_virt, desired, self.n_max),
             active=active_mask(desired, self.n_max))
+
+    def observe_live(self, m: LiveMetrics) -> Optional[Reconfiguration]:
+        """Closed-loop entry point: queued tuples become pending work in
+        the [22] cost model (each backlogged tuple will be compared against
+        the window population ~ rate * WS), then the §8.5 band applies."""
+        self.backlog = m.backlog_tuples * m.rate_tps * self.ws_seconds
+        return self.observe(m.rate_tps)

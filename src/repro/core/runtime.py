@@ -41,6 +41,32 @@ from repro.core.controller import Reconfiguration
 from repro.core.operator import OperatorDef, tick as general_tick
 
 
+def fold_frontier(frontier: np.ndarray, b: T.TupleBatch,
+                  n_inputs: int) -> None:
+    """Fold one batch's per-source max data tau into a host-side frontier
+    (mutated in place): the Alg. 5 bookkeeping behind control-tuple stamps,
+    shared by the async runtime's tick metadata and the mesh driver."""
+    tau = np.asarray(b.tau)
+    src = np.asarray(b.source)
+    ok = np.asarray(b.valid) & ~np.asarray(b.is_control)
+    for i in range(n_inputs):
+        sel = ok & (src == i)
+        if sel.any():
+            frontier[i] = max(frontier[i], int(tau[sel].max()))
+
+
+def ctrl_lanes(n_inputs: int, frontier, epoch_id: int, kmax: int,
+               p: int) -> T.TupleBatch:
+    """One control tuple per source so every per-source stream stays
+    sorted (Alg. 5); each stamped with that source's last forwarded tau."""
+    lanes = []
+    for i in range(n_inputs):
+        c = elastic.make_control_tuple(int(frontier[i]), epoch_id, kmax, p)
+        c = dataclasses.replace(c, source=jnp.asarray([i], jnp.int32))
+        lanes.append(c)
+    return functools.reduce(T.concat, lanes)
+
+
 @dataclasses.dataclass
 class VSNPipeline:
     op: OperatorDef
@@ -50,6 +76,9 @@ class VSNPipeline:
     tick_fn: Callable = None
     merge_fn: Callable = None
     init_sigma: Callable = None
+    # step_staged returns a device-computed per-instance load vector (the
+    # async runtime then skips its host-side key-histogram fallback)
+    device_inst_load = True
 
     def __post_init__(self):
         self.op = self.op.resolved()
@@ -79,6 +108,15 @@ class VSNPipeline:
         epoch = elastic.prepare_reconfig(epoch, ready, fmu_new, active_new)
         pre, post = elastic.split_epoch_masks(epoch, ready)
 
+        # per-instance load of this tick under the in-effect f_mu: one unit
+        # per (valid data lane, key-set entry) routed to its owner — the
+        # live signal the elasticity controllers consume (§8.4).
+        data = ready.valid & ~ready.is_control
+        kmask = data[:, None] & (ready.keys != T.NO_KEY)
+        owners = epoch.fmu[jnp.clip(ready.keys, 0, None)]
+        inst_load = jnp.zeros((self.n_max,), jnp.int32
+                              ).at[owners].add(kmask.astype(jnp.int32))
+
         ready_pre = dataclasses.replace(ready, valid=pre | (ready.is_control & ready.valid))
         sigma, outs1 = vsn.run_tick(self.op, sigma, ready_pre, epoch.fmu,
                                     epoch.active, self._tick, self._merge)
@@ -90,37 +128,50 @@ class VSNPipeline:
         ready_post = dataclasses.replace(ready, valid=post)
         sigma, outs2 = vsn.run_tick(self.op, sigma, ready_post, epoch.fmu,
                                     epoch.active, self._tick, self._merge)
-        return sg, epoch, sigma, outs1, outs2, switched
+        return sg, epoch, sigma, outs1, outs2, switched, inst_load
+
+    def stage(self, incoming: T.TupleBatch) -> T.TupleBatch:
+        """Asynchronously place a tick on the device (async ingest: the
+        ``device_put`` of tick T+1 overlaps device compute of tick T)."""
+        self._ensure_gate(incoming)
+        return jax.device_put(incoming)
+
+    def step_staged(self, staged: T.TupleBatch,
+                    reconfig: Optional[Reconfiguration] = None,
+                    frontier=None):
+        """``step`` on a pre-staged device batch; returns the extended
+        ``(outs_pre, outs_post, switched, inst_load)``.
+
+        ``frontier`` (host i32[n_inputs]: last forwarded tau per source) lets
+        a control tuple be stamped without reading ``sg.wmark`` back from
+        the device — a read that would block on the still-in-flight previous
+        step and serialize the async loop.  When None, the device state is
+        consulted (the synchronous path's behavior).
+        """
+        self._ensure_gate(staged)
+        if reconfig is not None:
+            if frontier is None:
+                frontier = np.asarray(self.sg.wmark.frontier)
+            incoming = T.concat(staged, ctrl_lanes(
+                self.op.n_inputs, frontier, reconfig.epoch, staged.kmax,
+                staged.payload_width))
+            fmu_new = jnp.asarray(reconfig.fmu)
+            active_new = jnp.asarray(reconfig.active)
+        else:
+            pad = T.empty_batch(self.op.n_inputs, staged.kmax,
+                                staged.payload_width)
+            incoming = T.concat(staged, pad)
+            fmu_new = self.epoch.fmu
+            active_new = self.epoch.active
+        (self.sg, self.epoch, self.sigma, outs1, outs2, switched,
+         inst_load) = self._step(self.sg, self.epoch, self.sigma, incoming,
+                                 fmu_new, active_new)
+        return outs1, outs2, switched, inst_load
 
     def step(self, incoming: T.TupleBatch,
              reconfig: Optional[Reconfiguration] = None):
         """Push one tick; returns (outputs_pre, outputs_post, switched)."""
-        self._ensure_gate(incoming)
-        if reconfig is not None:
-            ctrl = elastic.make_control_tuple(
-                int(np.asarray(self.sg.wmark.frontier).max()),
-                reconfig.epoch, incoming.kmax, incoming.payload_width)
-            # one control tuple per source so every per-source stream stays
-            # sorted (Alg. 5); stamped with that source's last tau.
-            ctrls = []
-            for i in range(self.op.n_inputs):
-                tau_i = int(np.asarray(self.sg.wmark.frontier)[i])
-                c = dataclasses.replace(
-                    ctrl, tau=jnp.asarray([tau_i], jnp.int32),
-                    source=jnp.asarray([i], jnp.int32))
-                ctrls.append(c)
-            incoming = functools.reduce(T.concat, ctrls, incoming)
-            fmu_new = jnp.asarray(reconfig.fmu)
-            active_new = jnp.asarray(reconfig.active)
-        else:
-            pad = T.empty_batch(self.op.n_inputs, incoming.kmax,
-                                incoming.payload_width)
-            incoming = T.concat(incoming, pad)
-            fmu_new = self.epoch.fmu
-            active_new = self.epoch.active
-        (self.sg, self.epoch, self.sigma, outs1, outs2,
-         switched) = self._step(self.sg, self.epoch, self.sigma, incoming,
-                                fmu_new, active_new)
+        outs1, outs2, switched, _ = self.step_staged(incoming, reconfig)
         return outs1, outs2, switched
 
 
@@ -242,6 +293,9 @@ class MeshPipeline:
     backend: str = None          # kernel backend for the fast-agg scatter
     n_max: int = None            # logical instance count (tables); defaults
     n_active: int = None         # to the shard count
+    # the mesh step keeps zero extra replicated outputs: per-instance load
+    # comes from the async runtime's host-side key histogram instead
+    device_inst_load = False
 
     def __post_init__(self):
         self.op = self.op.resolved()
@@ -290,32 +344,41 @@ class MeshPipeline:
                 incoming.payload_width)
             self._sg_ready = True
 
-    def _frontier_after(self, batches):
+    def _frontier_after(self, batches, frontier0=None):
         """Per-source last forwarded tau once ``batches`` have been pushed:
-        the Alg. 5 stamp for a control tuple injected after them."""
-        frontier = np.asarray(self.sg.wmark.frontier).copy()
+        the Alg. 5 stamp for a control tuple injected after them.
+        ``frontier0`` (host-tracked) avoids the device readback of
+        ``sg.wmark`` that would block on the in-flight step."""
+        frontier = (np.asarray(frontier0).copy() if frontier0 is not None
+                    else np.asarray(self.sg.wmark.frontier).copy())
         for b in batches:
-            tau = np.asarray(b.tau)
-            src = np.asarray(b.source)
-            ok = np.asarray(b.valid) & ~np.asarray(b.is_control)
-            for i in range(self.op.n_inputs):
-                sel = ok & (src == i)
-                if sel.any():
-                    frontier[i] = max(frontier[i], int(tau[sel].max()))
+            fold_frontier(frontier, b, self.op.n_inputs)
         return frontier
 
-    def _ctrl_lanes(self, frontier, epoch_id: int, kmax: int, p: int):
-        lanes = []
-        for i in range(self.op.n_inputs):
-            c = elastic.make_control_tuple(int(frontier[i]), epoch_id,
-                                           kmax, p)
-            c = dataclasses.replace(c, source=jnp.asarray([i], jnp.int32))
-            lanes.append(c)
-        return functools.reduce(T.concat, lanes)
-
     # -- the driver --------------------------------------------------------
+    def stage(self, incoming: T.TupleBatch) -> T.TupleBatch:
+        """Asynchronously replicate a tick across the mesh (async ingest:
+        the transfer of tick T+1 overlaps device compute of tick T)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self._ensure_gate(incoming)
+        rep = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda a: jax.device_put(a, rep), incoming)
+
+    def step_staged(self, staged: T.TupleBatch,
+                    reconfig: Optional[Reconfiguration] = None,
+                    frontier=None):
+        """One pre-staged tick with the extended return convention
+        ``(outs_pre, outs_post, switched, inst_load)``; ``inst_load`` is
+        None here (the async runtime derives it host-side from the tick's
+        key histogram — the mesh step keeps zero extra replicated outputs).
+        ``frontier`` as in ``VSNPipeline.step_staged``."""
+        o1, o2, sw = self.run([staged], reconfig=reconfig,
+                              frontier0=frontier)
+        return o1, o2, sw[0], None
+
     def run(self, batches, reconfig: Optional[Reconfiguration] = None,
-            reconfig_at: int = 0):
+            reconfig_at: int = 0, frontier0=None):
         """Push T ticks in one compiled call; an optional reconfiguration is
         injected as control tuples riding with tick ``reconfig_at`` (Alg. 5:
         stamped with each source's last forwarded tau at that point).
@@ -332,8 +395,9 @@ class MeshPipeline:
         padded = []
         for t, b in enumerate(batches):
             if reconfig is not None and t == reconfig_at:
-                frontier = self._frontier_after(batches[:t])
-                pad = self._ctrl_lanes(frontier, reconfig.epoch, kmax, p)
+                frontier = self._frontier_after(batches[:t], frontier0)
+                pad = ctrl_lanes(self.op.n_inputs, frontier, reconfig.epoch,
+                                 kmax, p)
             else:
                 pad = T.empty_batch(self.op.n_inputs, kmax, p)
             padded.append(T.concat(b, pad))

@@ -1,0 +1,21 @@
+"""Live-stream I/O: sources, bounded in-flight queues, sinks, metrics.
+
+The batch drivers pre-stage whole streams on the host; this package is the
+runtime-facing edge that turns them into *live* streams: rate-controlled
+synthetic sources and file/replay sources produce event-time-stamped
+``TupleBatch`` ticks, a bounded queue applies backpressure between the
+host ingest thread and the device step, sinks collect outputs and per-tick
+latency, and the ``MetricsBus`` aggregates the signals the elasticity
+controllers consume (``core.async_runtime`` closes the loop).
+"""
+
+from repro.io.metrics import MetricsBus
+from repro.io.queues import BoundedQueue
+from repro.io.sinks import CollectSink, NullSink
+from repro.io.sources import (RateSchedule, ReplaySource, SyntheticSource,
+                              load_stream, save_stream)
+
+__all__ = [
+    "BoundedQueue", "CollectSink", "MetricsBus", "NullSink", "RateSchedule",
+    "ReplaySource", "SyntheticSource", "load_stream", "save_stream",
+]

@@ -1,0 +1,75 @@
+"""Bounded in-flight queue: the backpressure edge between host and device.
+
+The ingest thread stages tick T+1 (``device_put``) while the device runs
+tick T; this queue bounds how far ahead it may run.  ``put`` blocks when
+the queue is full — a slow consumer therefore stalls the *producer*, never
+grows memory (the test contract: depth never exceeds ``cap``), and the
+observed depth is itself a load signal the controllers consume (a full
+queue means the pipeline is not keeping up with the offered rate).
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Optional
+
+
+class QueueClosed(Exception):
+    """put() after close() — the stream has ended."""
+
+
+class BoundedQueue:
+    """Thread-safe FIFO with a hard capacity and blocking put/get.
+
+    ``get`` returns ``None`` once the queue is closed *and* drained, so a
+    consumer loop is simply ``while (item := q.get()) is not None``.
+    Payloads must therefore not be ``None`` themselves.
+    """
+
+    def __init__(self, cap: int):
+        assert cap >= 1, cap
+        self.cap = cap
+        self._items: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        # -- stats (read under no lock: plain ints, monotone) --------------
+        self.high_water = 0        # max depth ever observed
+        self.total_put = 0
+        self.blocked_puts = 0      # puts that had to wait on a full queue
+
+    @property
+    def depth(self) -> int:
+        return len(self._items)
+
+    def put(self, item: Any, timeout: Optional[float] = None) -> None:
+        assert item is not None
+        with self._cv:
+            if len(self._items) >= self.cap:
+                self.blocked_puts += 1
+                if not self._cv.wait_for(
+                        lambda: self._closed or len(self._items) < self.cap,
+                        timeout=timeout):
+                    raise TimeoutError("BoundedQueue.put timed out")
+            if self._closed:
+                raise QueueClosed
+            self._items.append(item)
+            self.total_put += 1
+            self.high_water = max(self.high_water, len(self._items))
+            self._cv.notify_all()
+
+    def get(self, timeout: Optional[float] = None) -> Optional[Any]:
+        with self._cv:
+            if not self._cv.wait_for(
+                    lambda: self._closed or self._items, timeout=timeout):
+                raise TimeoutError("BoundedQueue.get timed out")
+            if self._items:
+                item = self._items.popleft()
+                self._cv.notify_all()
+                return item
+            return None               # closed and drained
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()

@@ -43,16 +43,7 @@ def make_stream_batch(taus, keys=None, payload=None, source=None, kmax=1):
 
 def collect_outputs(outs, n_instances=None):
     """Flatten (possibly per-instance stacked) Outputs to a sorted list of
-    (tau, payload tuple)."""
-    res = []
-    tau = np.asarray(outs.tau)
-    pay = np.asarray(outs.payload)
-    val = np.asarray(outs.valid)
-    if tau.ndim == 2:  # stacked per instance
-        for j in range(tau.shape[0]):
-            res += [(int(t), tuple(np.round(p, 4))) for t, p, ok in
-                    zip(tau[j], pay[j], val[j]) if ok]
-    else:
-        res += [(int(t), tuple(np.round(p, 4))) for t, p, ok in
-                zip(tau, pay, val) if ok]
-    return sorted(res)
+    (tau, payload tuple) — the repo-wide parity currency
+    (repro.io.sinks.flatten_outputs)."""
+    from repro.io.sinks import flatten_outputs
+    return sorted(flatten_outputs(outs))

@@ -1,0 +1,183 @@
+"""Direct unit tests for the elasticity controllers (§8.4-§8.5).
+
+ThresholdController: provision the *smallest* number of new instances that
+brings average load below target (0.70) when load crosses upper (0.90);
+decommission the *largest* number that keeps it below target when load
+drops under lower (0.45); no action inside the band.
+
+PredictiveController: the [0.70, 0.80] band over *predicted* comparisons
+(rate^2 * WS + backlog), sized to the band midpoint.
+
+Plus the live-metrics interface both expose to the async runtime.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.controller import (LiveMetrics, PredictiveController,
+                                   ThresholdController)
+
+K = 64
+
+
+def threshold(n_active=2, cap=1000.0, n_max=16):
+    return ThresholdController(n_max=n_max, k_virt=K,
+                               capacity_per_instance=cap, n_active=n_active)
+
+
+class TestThreshold:
+    def test_band_is_quiet(self):
+        ctl = threshold(n_active=2)
+        # load in [0.45, 0.90] x 2 instances x 1000 t/s -> no action
+        for rate in (900.0, 1400.0, 1799.0):
+            assert ctl.observe(rate) is None
+        assert ctl.n_active == 2 and ctl.epoch == 0
+
+    def test_provision_smallest_below_target(self):
+        ctl = threshold(n_active=2)
+        rc = ctl.observe(1900.0)          # load 0.95 > 0.90
+        # smallest Pi with 1900 / (Pi * 1000) <= 0.70 is ceil(1900/700) = 3
+        assert rc is not None and rc.n_active == 3
+        assert 1900.0 / (rc.n_active * 1000.0) <= ctl.target
+        # minimality: one fewer instance would sit above target
+        assert 1900.0 / ((rc.n_active - 1) * 1000.0) > ctl.target
+        assert rc.epoch == 1 and ctl.n_active == 3
+
+    def test_decommission_largest_below_target(self):
+        ctl = threshold(n_active=8)
+        rc = ctl.observe(1900.0)          # load 0.24 < 0.45
+        assert rc is not None and rc.n_active == 3   # ceil(1900/700)
+        assert 1900.0 / (rc.n_active * 1000.0) <= ctl.target
+
+    def test_boundaries_are_exclusive(self):
+        ctl = threshold(n_active=2)
+        assert ctl.observe(1800.0) is None   # load exactly 0.90
+        assert ctl.observe(900.0) is None    # load exactly 0.45
+
+    def test_clamped_to_n_max_and_one(self):
+        ctl = threshold(n_active=2, n_max=4)
+        rc = ctl.observe(100000.0)
+        assert rc.n_active == 4
+        ctl2 = threshold(n_active=1)
+        assert ctl2.observe(0.0) is None     # already at the floor
+
+    def test_reconfiguration_tables(self):
+        ctl = threshold(n_active=2, n_max=8)
+        rc = ctl.observe(1900.0)
+        assert rc.fmu.shape == (K,) and rc.active.shape == (8,)
+        assert set(np.unique(rc.fmu)) == set(range(rc.n_active))
+        assert rc.active[:rc.n_active].all()
+        assert not rc.active[rc.n_active:].any()
+
+    def test_epoch_monotone(self):
+        ctl = threshold(n_active=1)
+        e = []
+        for rate in (5000.0, 200.0, 8000.0):
+            rc = ctl.observe(rate)
+            if rc:
+                e.append(rc.epoch)
+        assert e == sorted(e) and len(set(e)) == len(e)
+
+
+class TestPredictive:
+    def ctl(self, n_active=1, cap=1e6, ws=1.0, n_max=16):
+        return PredictiveController(n_max=n_max, k_virt=K,
+                                    comparisons_per_s_per_instance=cap,
+                                    ws_seconds=ws, n_active=n_active)
+
+    def test_band_is_quiet(self):
+        ctl = self.ctl()
+        # work = rate^2 * 1.0; band [0.70, 0.80] x 1e6
+        assert ctl.observe(866.0) is None     # work 7.50e5, load 0.75
+        assert ctl.observe(880.0) is None     # load 0.774
+
+    def test_scale_up_to_band_midpoint(self):
+        ctl = self.ctl()
+        rc = ctl.observe(1000.0)              # work 1e6, load 1.0 > 0.8
+        # ceil(1e6 / (0.75 * 1e6)) = 2
+        assert rc is not None and rc.n_active == 2
+
+    def test_scale_down_when_under_band(self):
+        ctl = self.ctl(n_active=8)
+        rc = ctl.observe(1000.0)              # load 1e6/8e6 = 0.125 < 0.70
+        assert rc is not None and rc.n_active == 2
+
+    def test_backlog_counts_as_pending_work(self):
+        quiet = self.ctl()
+        assert quiet.observe(866.0) is None   # in-band without backlog
+        loaded = self.ctl()
+        loaded.backlog = 3e5                  # pending comparisons push over
+        rc = loaded.observe(866.0)
+        assert rc is not None and rc.n_active == 2
+
+    def test_quadratic_in_rate(self):
+        """Doubling the rate quadruples the work: sizing follows rate^2."""
+        a, b = self.ctl(), self.ctl()
+        ra = a.observe(2000.0)                # work 4e6 -> ceil(4/0.75)=6
+        rb = b.observe(4000.0)                # work 16e6 -> ceil(16/.75)=22
+        assert ra.n_active == 6 and rb.n_active == 16   # clamped to n_max
+
+
+class TestLiveInterface:
+    def test_threshold_observe_live_plain(self):
+        ctl = threshold(n_active=2)
+        m = LiveMetrics(rate_tps=1900.0)
+        rc = ctl.observe_live(m)
+        assert rc is not None and rc.n_active == 3
+
+    def test_threshold_skew_inflates(self):
+        # balanced: 1600 t/s over 2 instances is in-band (load 0.8)
+        ctl = threshold(n_active=2)
+        assert ctl.observe_live(LiveMetrics(
+            rate_tps=1600.0, inst_load=np.array([10, 10, 0, 0]),
+            n_active_observed=2)) is None
+        # all work on one instance: skew 2.0 -> effective 3200 -> provision
+        ctl2 = threshold(n_active=2)
+        rc = ctl2.observe_live(LiveMetrics(
+            rate_tps=1600.0, inst_load=np.array([20, 0, 0, 0]),
+            n_active_observed=2))
+        assert rc is not None and rc.n_active > 2
+
+    def test_threshold_skew_uses_observed_not_pending(self):
+        """A pending (uncommitted) provision must not inflate the skew of a
+        load sample measured under the old active set: under a steady rate
+        the controller settles after one decision instead of churning."""
+        ctl = threshold(n_active=2, cap=1000.0, n_max=16)
+        rc = ctl.observe_live(LiveMetrics(
+            rate_tps=9000.0, inst_load=np.array([30, 30] + [0] * 14),
+            n_active_observed=2))
+        assert rc is not None and rc.n_active == 13  # ceil(9000/(0.7*1000))
+        # next tick: switch not yet committed, load still measured over 2;
+        # judging skew against the pending 13 would read 6.5x and cascade
+        rc2 = ctl.observe_live(LiveMetrics(
+            rate_tps=9000.0, inst_load=np.array([30, 30] + [0] * 14),
+            n_active_observed=2))
+        assert rc2 is None, "steady rate must not cascade reconfigurations"
+
+    def test_threshold_queue_pressure(self):
+        ctl = threshold(n_active=2)
+        assert ctl.observe_live(LiveMetrics(
+            rate_tps=1600.0, queue_depth=0, queue_cap=4)) is None
+        ctl2 = threshold(n_active=2)
+        rc = ctl2.observe_live(LiveMetrics(
+            rate_tps=1600.0, queue_depth=4, queue_cap=4))   # 2x pressure
+        assert rc is not None and rc.n_active > 2
+
+    def test_predictive_backlog_from_queue(self):
+        ctl = PredictiveController(
+            n_max=16, k_virt=K, comparisons_per_s_per_instance=1e6,
+            ws_seconds=1.0, n_active=1)
+        assert ctl.observe_live(LiveMetrics(rate_tps=866.0)) is None
+        ctl2 = PredictiveController(
+            n_max=16, k_virt=K, comparisons_per_s_per_instance=1e6,
+            ws_seconds=1.0, n_active=1)
+        rc = ctl2.observe_live(LiveMetrics(rate_tps=866.0,
+                                           backlog_tuples=400.0))
+        assert rc is not None and rc.n_active >= 2
+
+    def test_load_skew_edge_cases(self):
+        assert LiveMetrics(rate_tps=1.0).load_skew() == 1.0
+        assert LiveMetrics(rate_tps=1.0,
+                           inst_load=np.zeros(4)).load_skew() == 1.0
+        assert LiveMetrics(rate_tps=1.0,
+                           inst_load=np.array([4, 4, 4, 4])).load_skew() == 1.0
