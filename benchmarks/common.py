@@ -52,6 +52,32 @@ def write_csv(path: str):
                           for v in (p50, p99, d2s)])
 
 
+def run_ingest_bench(batches, n_sources: int, n_leaves: int, *, tick: int,
+                     oracle_cap: int = None):
+    """Shared multihost-ingest harness (q1/q3): root-merge throughput per
+    leaf count in {1, n_leaves} (warm-jit pass then timed pass), plus a
+    recorded pass checked tuple-for-tuple against the single-ScaleGate
+    oracle.  Returns ``(tput_by_leaves, tier_ticks, tier_parity_ok)``."""
+    from repro.ingest import (IngestTier, collect_tuples,
+                              single_gate_stream)
+
+    kw = dict(worker="thread", leaf_cap=tick, root_cap=2 * tick,
+              out_pad=2 * tick)
+    tput = {}
+    for leaves in sorted({1, n_leaves}):
+        list(IngestTier(batches, n_sources, leaves, **kw))   # warm jits
+        tier = IngestTier(batches, n_sources, leaves, **kw)
+        t0 = time.perf_counter()
+        list(tier)
+        tput[leaves] = tier.stats().tuples_out / (time.perf_counter() - t0)
+    tier = IngestTier(batches, n_sources, n_leaves, record=True, **kw)
+    tier_ticks = list(tier)
+    oracle = single_gate_stream(batches, n_sources,
+                                cap=oracle_cap or 3 * tick)
+    ok = collect_tuples(tier_ticks) == collect_tuples(oracle)
+    return tput, tier_ticks, ok
+
+
 def time_fn(fn, *args, warmup=2, iters=5):
     for _ in range(warmup):
         out = fn(*args)

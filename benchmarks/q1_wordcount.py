@@ -16,6 +16,15 @@ host ingest (datagen + device_put of tick T+1) with device compute of
 tick T, against the synchronous host loop (``run_sync``) on the identical
 stream — reporting the overlap gain, tick-latency p50/p99, and exact
 async-vs-sync output-set parity (a FAIL row if they diverge).
+
+``--ingest-hosts N`` runs the multihost variant: the workload is spread
+over 2N physical sources and merged by the hierarchical multi-host
+ScaleGate (``repro.ingest.IngestTier``, N leaf workers feeding the root
+merge).  Reports root-merge throughput scaling vs leaf count and a
+parity-gated row: the tier-merged stream must equal the single-ScaleGate
+oracle tuple-for-tuple, and driving both streams through the same
+pipeline (``MeshPipeline`` when combined with ``--mesh``) must produce
+identical outputs.
 """
 
 import time
@@ -95,6 +104,43 @@ def run_mesh(n_shards: int, wc_mode: str, pair_dist: int, n_ticks: int = 12):
     return tput, sum(coll.values())
 
 
+def run_ingest(n_leaves: int, mesh: int = 0, n_ticks: int = 12):
+    """Multihost ingest: root-merge throughput vs leaf count + parity.
+
+    Returns (tput_by_leaves, tier_parity_ok, pipe_parity_ok_or_None)."""
+    from benchmarks.common import run_ingest_bench
+    from repro.ingest import single_gate_stream
+    from repro.io.sinks import flatten_outputs
+
+    n_sources = 2 * n_leaves
+    batches = list(datagen.tweets(
+        np.random.default_rng(7), n_ticks=n_ticks, tick=TICK,
+        words_per_tweet=6, vocab=5000, k_virt=K_VIRT, rate_per_tick=50,
+        n_sources=n_sources))
+    tput, tier_ticks, tier_ok = run_ingest_bench(batches, n_sources,
+                                                 n_leaves, tick=TICK)
+
+    pipe_ok = None
+    if mesh:
+        oracle_ticks = single_gate_stream(batches, n_sources, cap=3 * TICK)
+        from repro.launch.mesh import make_stream_mesh
+        op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024,
+                             extra_slots=2, n_inputs=n_sources)
+
+        def drive(ticks):
+            pipe = MeshPipeline(op, make_stream_mesh(mesh),
+                                stash_cap=4 * TICK, mode="fast-agg",
+                                agg_kind="count")
+            res = []
+            for b in ticks:
+                o1, o2, _ = pipe.step(b)
+                res += flatten_outputs(o1) + flatten_outputs(o2)
+            return sorted(res)
+
+        pipe_ok = drive(tier_ticks) == drive(oracle_ticks)
+    return tput, tier_ok, pipe_ok
+
+
 def make_fast_pipe(op):
     return VSNPipeline(op, n_max=N_INST, n_active=N_INST, stash_cap=TICK,
                        tick_fn=fast_tick, merge_fn=merge_fast_state,
@@ -131,7 +177,7 @@ def run_async(wc_mode: str, pair_dist: int, n_ticks: int = 32):
     return rep_a, rep_s, ok
 
 
-def main(mesh: int = 0, async_: bool = False):
+def main(mesh: int = 0, async_: bool = False, ingest_hosts: int = 0):
     for wc_mode, dist, label in [("wordcount", 0, "wordcount"),
                                  ("paircount", 3, "pair_L"),
                                  ("paircount", 10, "pair_M")]:
@@ -157,6 +203,21 @@ def main(mesh: int = 0, async_: bool = False):
         t_m, coll = run_mesh(mesh, "wordcount", 0)
         emit(f"q1_wordcount_mesh{mesh}_tput_tps", 1e6 / t_m,
              f"{t_m:.0f} t/s batched ingest, collective_bytes={coll}")
+    if ingest_hosts:
+        use_mesh = mesh if (mesh and len(jax.devices()) >= mesh) else 0
+        tput, tier_ok, pipe_ok = run_ingest(ingest_hosts, mesh=use_mesh)
+        for leaves, tps in sorted(tput.items()):
+            emit(f"q1_ingest_root_tput_leaves{leaves}",
+                 1e6 / max(tps, 1e-9),
+                 f"{tps:.0f} t/s root merge, {leaves} leaf workers")
+        scale = tput[ingest_hosts] / max(tput[1], 1e-9)
+        label = (f"q1_wordcount_ingest{ingest_hosts}"
+                 + (f"_mesh{use_mesh}" if use_mesh else "_vsn"))
+        derived = (f"{ingest_hosts}-leaf/1-leaf root tput {scale:.2f}x, "
+                   f"outputs_match_oracle={tier_ok}")
+        if pipe_ok is not None:
+            derived += f", pipeline_outputs_match={pipe_ok}"
+        emit(label, 1e6 / max(tput[ingest_hosts], 1e-9), derived)
 
 
 if __name__ == "__main__":
@@ -164,5 +225,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", type=int, default=0)
     ap.add_argument("--async", dest="async_", action="store_true")
+    ap.add_argument("--ingest-hosts", type=int, default=0)
     a = ap.parse_args()
-    main(mesh=a.mesh, async_=a.async_)
+    main(mesh=a.mesh, async_=a.async_, ingest_hosts=a.ingest_hosts)

@@ -184,7 +184,21 @@ def run_async(n_ticks: int = 16):
     return rep_a, rep_s, ok
 
 
-def main(mesh: int = 0, async_: bool = False):
+def run_ingest(n_leaves: int, n_ticks: int = 12):
+    """Multihost ingest over the two-stream q3 workload: one leaf gate per
+    physical stream (L/R source ids double as ingest source ids), root-merge
+    throughput scaling vs leaf count, tier-vs-flat-gate parity."""
+    from benchmarks.common import run_ingest_bench
+
+    n_sources = 2                # the q3 workload is two-stream by contract
+    n_leaves = min(n_leaves, n_sources)
+    batches = list(datagen.scalejoin(np.random.default_rng(3),
+                                     n_ticks=n_ticks, tick=TICK, k_virt=1))
+    tput, _, ok = run_ingest_bench(batches, n_sources, n_leaves, tick=TICK)
+    return tput, ok, n_leaves
+
+
+def main(mesh: int = 0, async_: bool = False, ingest_hosts: int = 0):
     base = None
     for n in (1, 2, 4, 8):
         cps, total, cv, tps = run(n)
@@ -203,6 +217,17 @@ def main(mesh: int = 0, async_: bool = False):
              f"{rep_s.throughput_tps:.0f} t/s sync host loop "
              f"(overlap {gain:.2f}x), outputs_match_sync={ok}",
              p50_ms=rep_a.p50_ms, p99_ms=rep_a.p99_ms)
+    if ingest_hosts:
+        tput, ok, leaves_used = run_ingest(ingest_hosts)
+        for leaves, tps in sorted(tput.items()):
+            emit(f"q3_ingest_root_tput_leaves{leaves}",
+                 1e6 / max(tps, 1e-9),
+                 f"{tps:.0f} t/s root merge, {leaves} leaf workers")
+        scale = tput[leaves_used] / max(tput[1], 1e-9)
+        emit(f"q3_scalejoin_ingest{leaves_used}",
+             1e6 / max(tput[leaves_used], 1e-9),
+             f"{leaves_used}-leaf/1-leaf root tput {scale:.2f}x, "
+             f"outputs_match_oracle={ok}")
     if mesh:
         if len(jax.devices()) < mesh:
             emit("q3_mesh_SKIP", 0.0,
@@ -220,5 +245,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", type=int, default=0)
     ap.add_argument("--async", dest="async_", action="store_true")
+    ap.add_argument("--ingest-hosts", type=int, default=0)
     a = ap.parse_args()
-    main(mesh=a.mesh, async_=a.async_)
+    main(mesh=a.mesh, async_=a.async_, ingest_hosts=a.ingest_hosts)

@@ -41,6 +41,12 @@ def main(argv=None) -> None:
                          "supports them (q1/q3/q5: AsyncStreamRuntime "
                          "overlap gain, tick-latency quantiles, "
                          "detection→switch latency, async-vs-sync parity)")
+    ap.add_argument("--ingest-hosts", type=int, default=0,
+                    help="run multihost-ingest variants where a bench "
+                         "supports them (q1/q3: N-leaf hierarchical "
+                         "ScaleGate root-merge throughput scaling + "
+                         "parity vs the single-gate oracle; combine with "
+                         "--mesh for the mesh-pipeline parity gate)")
     ap.add_argument("--csv", default=None,
                     help="also write the result rows to this CSV file "
                          "(CI uploads it as a workflow artifact)")
@@ -72,6 +78,8 @@ def main(argv=None) -> None:
             kw["mesh"] = args.mesh
         if "async_" in params:
             kw["async_"] = args.async_
+        if "ingest_hosts" in params:
+            kw["ingest_hosts"] = args.ingest_hosts
         try:
             mod.main(**kw)
         except Exception:

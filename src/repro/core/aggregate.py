@@ -38,6 +38,7 @@ from repro.core.windows import MULTI, SINGLE, WindowSpec
 def reduce_aggregate(window: WindowSpec, k_virt: int, *, width: int = 1,
                      f_r: Callable, init_val: float, emit_key: bool = True,
                      out_cap: int = 256, extra_slots: int = 0,
+                     n_inputs: int = 1,
                      name: str = "aggregate") -> OperatorDef:
     """A/A+ with an incremental reducer f_R and expiry output f_A.
 
@@ -68,7 +69,7 @@ def reduce_aggregate(window: WindowSpec, k_virt: int, *, width: int = 1,
         return ({"acc": jnp.full_like(zeta_s["acc"], init_val)},
                 jnp.zeros((k,), bool))
 
-    return OperatorDef(window=window, n_inputs=1, k_virt=k_virt,
+    return OperatorDef(window=window, n_inputs=n_inputs, k_virt=k_virt,
                        payload_out=width + (1 if emit_key else 0),
                        init_zeta=init_zeta, f_u=f_u, f_o=f_o, f_s=f_s,
                        out_cap=out_cap, extra_slots=extra_slots, name=name)

@@ -42,7 +42,7 @@ from repro.core import tuples as T
 from repro.core.controller import Reconfiguration
 from repro.core.runtime import fold_frontier
 from repro.io.metrics import MetricsBus
-from repro.io.queues import BoundedQueue
+from repro.io.queues import BoundedQueue, QueueClosed
 from repro.io.sinks import CollectSink
 
 
@@ -249,10 +249,11 @@ class AsyncStreamRuntime:
         try:
             while True:
                 t_wait = time.perf_counter()
-                item = self.queue.get()
-                idle_s = time.perf_counter() - t_wait
-                if item is None:
+                try:
+                    item = self.queue.get()
+                except QueueClosed:     # ingest done and every tick drained
                     break
+                idle_s = time.perf_counter() - t_wait
                 rc = self._decide(item.meta)
                 t0 = time.perf_counter()
                 o1, o2, switched, inst_load = self.pipeline.step_staged(

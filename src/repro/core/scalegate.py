@@ -52,10 +52,13 @@ class ScaleGateState:
 
 
 def init_scalegate(n_sources: int, capacity: int, kmax: int,
-                   payload_width: int) -> ScaleGateState:
+                   payload_width: int, active=None) -> ScaleGateState:
+    """``active`` masks the initial ESG source set: a hierarchical leaf gate
+    (repro.ingest.leaf) owns only a subset of the global source ids and must
+    not let the others gate its watermark."""
     return ScaleGateState(
         stash=T.empty_batch(capacity, kmax, payload_width),
-        wmark=wm.init_watermark(n_sources),
+        wmark=wm.init_watermark(n_sources, active=active),
         overflow=jnp.zeros((), jnp.int32),
     )
 
@@ -71,6 +74,29 @@ def _stable_order(tau: jax.Array, source: jax.Array, valid: jax.Array) -> jax.Ar
     return order1[order2]
 
 
+# The tie-break CONTRACT of merge_order, per backend.  Both keys are valid
+# ScaleGate total orders: the ready *set* and the per-tau grouping are
+# identical under either; only the order among equal-tau tuples differs.
+# Nothing downstream may depend on the tie order beyond determinism: the
+# hierarchical root merge (repro.ingest.root) re-sorts whatever its leaves
+# forward, so leaves running different backends compose correctly, and
+# tests/test_ingest_tier.py pins cross-backend parity on tied-tau batches.
+TIE_BREAK = {
+    "xla": ("tau", "source", "arrival"),
+    "pallas": ("tau", "arrival"),
+    "pallas-interpret": ("tau", "arrival"),
+}
+
+
+def tie_break(backend: str = None):
+    """The documented sort key of ``merge_order`` under ``backend``
+    (resolved), as a tuple of field names — lexicographic, most-significant
+    first.  ``arrival`` is the lane index in the combined stash+incoming
+    buffer, so both contracts are deterministic total orders."""
+    from repro.kernels import dispatch
+    return TIE_BREAK[dispatch.resolve(backend)]
+
+
 def merge_order(tau: jax.Array, source: jax.Array, valid: jax.Array,
                 n_sources: int, backend: str = None) -> jax.Array:
     """The merge's total order, via the kernel backend dispatcher.
@@ -78,10 +104,9 @@ def merge_order(tau: jax.Array, source: jax.Array, valid: jax.Array,
     ``xla`` (the CPU default) keeps the exact legacy order — lexicographic
     ``(tau, source, arrival)``.  The Pallas backends run the
     ``scalegate_merge`` bitonic network, which orders by ``(tau, arrival)``;
-    both are valid ScaleGate total orders (ready-set content and per-tau
-    grouping are identical — only the tie order among equal timestamps from
-    different sources differs).  The kernel requires a power-of-two batch;
-    non-power-of-two batches fall back to the argsort path.
+    both are valid ScaleGate total orders (see ``TIE_BREAK`` above).  The
+    kernel requires a power-of-two batch; non-power-of-two batches fall
+    back to the argsort path (and thus to the xla tie-break).
     """
     from repro.kernels import dispatch
 
@@ -95,19 +120,29 @@ def merge_order(tau: jax.Array, source: jax.Array, valid: jax.Array,
 
 
 def push(state: ScaleGateState, incoming: T.TupleBatch, *,
-         backend: str = None) -> Tuple[ScaleGateState, T.TupleBatch]:
+         backend: str = None,
+         wstate: wm.WatermarkState = None) -> Tuple[ScaleGateState, T.TupleBatch]:
     """Merge a tick of per-source tuples; emit the ready prefix.
 
     The emitted batch has static size ``capacity + incoming.batch`` with a
     validity mask selecting the ready tuples (sorted, exactly-once).
     ``backend`` selects the merge-sort realization (see ``merge_order``);
     the per-source watermark frontiers are stateful and always tracked here.
+
+    ``wstate`` overrides the implicit per-tuple frontier fold with an
+    externally computed ``WatermarkState`` — the hierarchical root merge
+    (repro.ingest.root) gates on *explicitly reported* per-leaf watermarks
+    (``wm.observe_explicit``) because its incoming tuples keep their
+    original source ids for the downstream pipeline while the root's
+    frontier axis is the leaf set.
     """
     cap = state.capacity
     combined = T.concat(state.stash, incoming)
 
     # addTuple: fold the new arrivals into the per-source frontiers.
-    wstate = wm.observe(state.wmark, incoming.source, incoming.tau, incoming.valid)
+    if wstate is None:
+        wstate = wm.observe(state.wmark, incoming.source, incoming.tau,
+                            incoming.valid)
     w = wstate.value()
 
     order = merge_order(combined.tau, combined.source, combined.valid,

@@ -64,6 +64,40 @@ def observe(state: WatermarkState, source: jax.Array, tau: jax.Array,
     return dataclasses.replace(state, frontier=new_frontier)
 
 
+def observe_explicit(state: WatermarkState, values: jax.Array,
+                     mask: jax.Array) -> WatermarkState:
+    """Explicit-watermark mode: fold reported per-source watermark values.
+
+    The hierarchical ingest tier (repro.ingest) runs the merge one level up:
+    each leaf ScaleGate *reports* its own watermark ``W_leaf`` alongside its
+    ready batch, and the root tracks ``frontier[leaf] = max seen W_leaf``
+    instead of folding per-tuple taus — a leaf that forwarded nothing this
+    round still advances the root watermark (liveness), and the report
+    dominates any forwarded tau (a leaf only forwards ``tau <= W_leaf``).
+    Frontiers stay non-decreasing (§2.3).
+    """
+    values = jnp.asarray(values, jnp.int32)
+    frontier = jnp.where(mask, jnp.maximum(state.frontier, values),
+                         state.frontier)
+    return dataclasses.replace(state, frontier=frontier)
+
+
+def clamp_frontier(state: WatermarkState, mask: jax.Array,
+                   gamma) -> WatermarkState:
+    """Rebalance clamp (Lemma 3, applied one level up): when a merge point's
+    source *gains* a sub-stream whose safe lower bound ``gamma`` is below the
+    frontier already established for it, the frontier must drop to ``gamma``
+    — future tuples on that source are only guaranteed ``tau >= gamma``.
+    Safe for the merge point's own watermark monotonicity as long as
+    ``gamma >= W`` (the caller's obligation; Lemma 3 guarantees it when
+    ``gamma`` is an active source's frontier, since every active frontier
+    is ``>= W = min_i frontier[i]``)."""
+    gamma = jnp.asarray(gamma, jnp.int32)
+    frontier = jnp.where(mask, jnp.minimum(state.frontier, gamma),
+                         state.frontier)
+    return dataclasses.replace(state, frontier=frontier)
+
+
 def add_sources(state: WatermarkState, mask: jax.Array, gamma) -> WatermarkState:
     """ESG ``addSources``: new sources start at the Lemma-3 safe bound gamma."""
     frontier = jnp.where(mask & ~state.active,

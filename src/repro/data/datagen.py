@@ -35,9 +35,15 @@ def _pair_key(w1, w2, k_virt):
 def tweets(rng: np.random.Generator, *, n_ticks: int, tick: int,
            words_per_tweet: int, vocab: int, k_virt: int,
            mode: str = "wordcount", pair_dist: int = 3,
-           rate_per_tick: int = 100) -> Iterator[T.TupleBatch]:
+           rate_per_tick: int = 100,
+           n_sources: int = 1) -> Iterator[T.TupleBatch]:
     """mode: wordcount | paircount.  Keys materialized into the key set
-    (f_MK output), payload[0] = tweet length (for the longest-tweet A+)."""
+    (f_MK output), payload[0] = tweet length (for the longest-tweet A+).
+
+    ``n_sources > 1`` spreads the tuples over that many physical input
+    streams (multi-host ingest workloads): the global tick is tau-sorted, so
+    every per-source sub-stream is timestamp-sorted too — the ScaleGate
+    source contract (§2.4) holds per source by construction."""
     tau = 0
     if mode == "wordcount":
         kmax = words_per_tweet
@@ -61,7 +67,9 @@ def tweets(rng: np.random.Generator, *, n_ticks: int, tick: int,
                     keys[:, col] = _pair_key(words[:, i], words[:, j], k_virt)
                     col += 1
         payload = np.full((tick, 1), float(words_per_tweet), np.float32)
-        yield T.make_batch(taus, payload, keys=keys, kmax=kmax)
+        source = (rng.integers(0, n_sources, tick).astype(np.int32)
+                  if n_sources > 1 else None)
+        yield T.make_batch(taus, payload, keys=keys, source=source, kmax=kmax)
 
 
 def scalejoin(rng: np.random.Generator, *, n_ticks: int, tick: int,

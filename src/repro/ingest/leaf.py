@@ -1,0 +1,241 @@
+"""Leaf ScaleGate: one ingest worker's merge over its owned sources.
+
+A leaf is the paper's per-host ScaleGate (§6 hierarchical TB): it merges
+the timestamp-sorted streams of its *disjoint* source subset into a ready
+stream that is itself timestamp-sorted — so the leaf outputs compose as
+sources of the root merge one level up.  The leaf is a thin, host-driven
+wrapper around the same ``scalegate.push`` the pipelines use:
+
+* per round it pushes its routed slice (chunked to a fixed lane width so
+  jit shapes stay static) and emits a ``LeafOut`` — the *compacted* ready
+  tuples plus the leaf's reported watermark ``W_leaf`` and its cumulative
+  stash-overflow count (surfaced every round, never silent);
+* ESG membership ops ride the same round stream: ``add_source`` starts a
+  gained source at its Lemma-3 safe bound gamma, ``remove_source`` flushes
+  (the frontier stops gating; stashed tuples drain as W rises), ``flush``
+  removes every owned source so the final push empties the stash.
+
+``LeafOut`` payloads are plain numpy (the tier's channels may cross process
+boundaries); the worker loops for thread and process mode live here too so
+a spawn-context child can import them top-level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import scalegate
+from repro.core import tuples as T
+
+FIELDS = ("tau", "keys", "payload", "source", "valid", "is_control",
+          "ctrl_epoch")
+
+
+def batch_to_np(b: T.TupleBatch) -> Dict[str, np.ndarray]:
+    return {f: np.asarray(getattr(b, f)) for f in FIELDS}
+
+
+def np_to_batch(d: Dict[str, np.ndarray]) -> T.TupleBatch:
+    import jax.numpy as jnp
+    return T.TupleBatch(**{f: jnp.asarray(d[f]) for f in FIELDS})
+
+
+def compact_np(d: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Keep only the valid lanes (host-side; output of a gate push)."""
+    keep = d["valid"]
+    return {f: d[f][keep] for f in FIELDS}
+
+
+def empty_np(kmax: int, payload_width: int) -> Dict[str, np.ndarray]:
+    return {
+        "tau": np.zeros((0,), np.int32),
+        "keys": np.zeros((0, kmax), np.int32),
+        "payload": np.zeros((0, payload_width), np.float32),
+        "source": np.zeros((0,), np.int32),
+        "valid": np.zeros((0,), bool),
+        "is_control": np.zeros((0,), bool),
+        "ctrl_epoch": np.zeros((0,), np.int32),
+    }
+
+
+def concat_np(parts: Sequence[Dict[str, np.ndarray]],
+              kmax: int, payload_width: int) -> Dict[str, np.ndarray]:
+    parts = [p for p in parts if p["tau"].shape[0]]
+    if not parts:
+        return empty_np(kmax, payload_width)
+    return {f: np.concatenate([p[f] for p in parts]) for f in FIELDS}
+
+
+def pad_np(d: Dict[str, np.ndarray], n: int) -> Dict[str, np.ndarray]:
+    """Pad to exactly ``n`` lanes with invalid filler (static jit shapes)."""
+    have = d["tau"].shape[0]
+    assert have <= n, (have, n)
+    if have == n:
+        return d
+    pad = n - have
+    out = {}
+    for f in FIELDS:
+        a = d[f]
+        shape = (pad,) + a.shape[1:]
+        out[f] = np.concatenate([a, np.zeros(shape, a.dtype)])
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_push(backend: Optional[str]):
+    """One jitted ``scalegate.push`` per backend, shared by every gate (the
+    jit cache then dedups compilations across leaves by shape)."""
+    import jax
+    return jax.jit(functools.partial(scalegate.push, backend=backend))
+
+
+@dataclasses.dataclass
+class LeafOut:
+    """One leaf's contribution to one root round (picklable: numpy only)."""
+    leaf_id: int
+    round_id: int
+    ready: Dict[str, np.ndarray]   # compacted ready tuples, tau-sorted
+    wmark: int                     # reported leaf watermark W_leaf
+    overflow: int                  # cumulative leaf stash-overflow count
+    final: bool = False            # last message (leaf flushed and left)
+
+    @property
+    def n_ready(self) -> int:
+        return int(self.ready["tau"].shape[0])
+
+
+class LeafGate:
+    """The pure leaf state machine; drivable inline, from a thread, or from
+    a child process (see the worker loops below)."""
+
+    def __init__(self, leaf_id: int, n_sources: int, owned: np.ndarray,
+                 cap: int, kmax: int, payload_width: int,
+                 backend: Optional[str] = None, chunk: Optional[int] = None):
+        import jax.numpy as jnp
+        self.leaf_id = leaf_id
+        self.n_sources = n_sources
+        self.kmax = kmax
+        self.payload_width = payload_width
+        self.backend = backend
+        # chunk width: combined merge size is cap + chunk; keeping it a
+        # power of two lets merge_order take the bitonic-kernel path
+        self.chunk = chunk or cap
+        self.state = scalegate.init_scalegate(
+            n_sources, cap, kmax, payload_width,
+            active=jnp.asarray(owned, bool))
+        self._push = _jit_push(backend)
+
+    # -- per-round work ------------------------------------------------------
+    def push_round(self, round_id: int, slice_np: Optional[Dict] = None,
+                   final: bool = False) -> LeafOut:
+        """Push this round's routed tuples (possibly none) and report."""
+        parts: List[Dict[str, np.ndarray]] = []
+        lanes = 0 if slice_np is None else slice_np["tau"].shape[0]
+        off = 0
+        while True:
+            n = min(self.chunk, lanes - off)
+            if slice_np is None or n <= 0:
+                chunk = pad_np(empty_np(self.kmax, self.payload_width),
+                               self.chunk)
+            else:
+                chunk = pad_np({f: slice_np[f][off:off + n] for f in FIELDS},
+                               self.chunk)
+            self.state, out = self._push(self.state, np_to_batch(chunk))
+            parts.append(compact_np(batch_to_np(out)))
+            off += self.chunk
+            if off >= lanes:
+                break
+        ready = concat_np(parts, self.kmax, self.payload_width)
+        return LeafOut(self.leaf_id, round_id, ready,
+                       wmark=int(self.state.wmark.value()),
+                       overflow=int(self.state.overflow), final=final)
+
+    # -- ESG membership ------------------------------------------------------
+    def _mask(self, src: int):
+        import jax.numpy as jnp
+        m = np.zeros((self.n_sources,), bool)
+        m[src] = True
+        return jnp.asarray(m)
+
+    def add_source(self, src: int, gamma: int) -> None:
+        self.state = scalegate.add_sources(self.state, self._mask(src), gamma)
+
+    def remove_source(self, src: int) -> None:
+        self.state = scalegate.remove_sources(self.state, self._mask(src))
+
+    def flush_all(self) -> None:
+        import jax.numpy as jnp
+        self.state = scalegate.remove_sources(
+            self.state, jnp.ones((self.n_sources,), bool))
+
+    def apply(self, ops: Sequence[Tuple]) -> bool:
+        """Apply a reconfiguration op list; returns True when this leaf is
+        leaving (its subsequent push is its flush + final message)."""
+        leaving = False
+        for op in ops:
+            if op[0] == "add_source":
+                self.add_source(op[1], op[2])
+            elif op[0] == "remove_source":
+                self.remove_source(op[1])
+            elif op[0] == "flush":
+                self.flush_all()
+                leaving = True
+            else:                                     # pragma: no cover
+                raise ValueError(f"unknown leaf op {op!r}")
+        return leaving
+
+
+def run_gate_loop(gate: LeafGate, recv, send) -> None:
+    """The worker protocol: drive ``gate`` from ``recv()`` messages until a
+    stop/flush; shared verbatim by thread and process workers.
+
+    Messages: ``("tick", round, slice_np)`` | ``("cmd", round, ops)`` |
+    ``("stop",)``.  Every tick/cmd message produces exactly one ``LeafOut``
+    via ``send`` — the root's round barrier counts on it.
+    """
+    from repro.io.queues import QueueClosed
+    while True:
+        try:
+            msg = recv()
+        except QueueClosed:
+            break
+        kind = msg[0]
+        if kind == "stop":
+            break
+        if kind == "tick":
+            send(gate.push_round(msg[1], msg[2]))
+        elif kind == "cmd":
+            leaving = gate.apply(msg[2])
+            send(gate.push_round(msg[1], None, final=leaving))
+            if leaving:
+                break
+        else:                                         # pragma: no cover
+            raise ValueError(f"unknown message {msg!r}")
+
+
+def process_worker_main(cfg: Dict, in_q, out_q) -> None:
+    """Child-process entry point (spawn context: top-level importable).
+
+    ``cfg`` carries the LeafGate constructor args as picklable values; jax
+    initializes fresh in the child (CPU), and all channel payloads are
+    numpy.  Mirrors ``run_gate_loop`` over the mp queues.
+    """
+    from repro.ingest.channels import MP_CLOSE
+    from repro.io.queues import QueueClosed
+
+    gate = LeafGate(cfg["leaf_id"], cfg["n_sources"],
+                    np.asarray(cfg["owned"], bool), cfg["cap"], cfg["kmax"],
+                    cfg["payload_width"], backend=cfg.get("backend"),
+                    chunk=cfg.get("chunk"))
+
+    def recv():
+        msg = in_q.get()
+        if msg == MP_CLOSE:
+            raise QueueClosed
+        return msg
+
+    run_gate_loop(gate, recv, out_q.put)

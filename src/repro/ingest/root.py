@@ -1,0 +1,186 @@
+"""Root merge: the upper level of the hierarchical ScaleGate (§6).
+
+The root is *literally* ``scalegate.push`` one level up: its "sources" are
+the leaf gates, whose ready batches are themselves timestamp-sorted
+streams.  Two deltas from a flat gate, both threaded through the core
+primitives rather than re-implemented:
+
+* **explicit watermarks** — the root's frontier axis is the leaf set while
+  its tuples keep their original source ids for the downstream pipeline,
+  so the per-tuple fold is replaced by ``wm.observe_explicit`` over the
+  leaves' *reported* watermarks (``scalegate.push(wstate=…)``).  Since a
+  leaf only forwards ``tau <= W_leaf``, the report dominates any forwarded
+  tau, and Definition 3 composes:
+  ``W_root = min_leaf W_leaf = min_leaf min_{i in leaf} tau-frontier_i =
+  min_i frontier_i`` — exactly the flat gate's watermark.
+* **rebalance clamps** — when a leaf *gains* a migrated source, the root's
+  frontier for that leaf drops to the source's Lemma-3 bound gamma
+  (``wm.clamp_frontier``); gamma is an active source's frontier, hence
+  ``>= W_root``, so the root watermark never regresses.
+
+The root also *checks* its two end-to-end invariants every round — the
+emitted stream's tau is non-decreasing across rounds and the watermark is
+monotone — and surfaces stash overflow (its own and each leaf's reported
+count) through ``warnings`` + stats, never silently.
+
+Tie-break tolerance: the root re-sorts whatever arrives, so leaves may run
+either ``merge_order`` backend contract (``(tau, source, arrival)`` on xla,
+``(tau, arrival)`` on the Pallas bitonic path) — the root's ready *set*
+and tau grouping are identical regardless (see
+``repro.core.scalegate.TIE_BREAK``).
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import scalegate
+from repro.core import tuples as T
+from repro.core import watermark as wm
+from repro.ingest.leaf import LeafOut, concat_np, np_to_batch, pad_np
+
+MIN_PAD = 32
+
+
+def bucket(n: int, lo: int = MIN_PAD) -> int:
+    """Power-of-two lane bucket >= n (bounds the set of jit shapes)."""
+    p = lo
+    while p < n:
+        p <<= 1
+    return p
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_push_wstate(backend: Optional[str]):
+    import jax
+
+    def push(state, incoming, wstate):
+        return scalegate.push(state, incoming, backend=backend,
+                              wstate=wstate)
+    return jax.jit(push)
+
+
+class RootMerge:
+    def __init__(self, max_leaves: int, cap: int, kmax: int,
+                 payload_width: int, active_leaves: Sequence[int],
+                 backend: Optional[str] = None, out_pad: int = MIN_PAD):
+        import jax.numpy as jnp
+        self.max_leaves = max_leaves
+        self.kmax = kmax
+        self.payload_width = payload_width
+        self.backend = backend
+        # lane floor for the incoming pad: a floor near the steady-state
+        # round volume keeps the emitted batch shape constant, so the
+        # downstream pipeline compiles one step instead of one per bucket
+        self.out_pad = out_pad
+        active = np.zeros((max_leaves,), bool)
+        active[list(active_leaves)] = True
+        self.state = scalegate.init_scalegate(
+            max_leaves, cap, kmax, payload_width, active=jnp.asarray(active))
+        self._push = _jit_push_wstate(backend)
+        # -- invariants + accounting -------------------------------------
+        self.last_emitted_tau = -1       # total-order witness across rounds
+        self.wmark = -1                  # monotone watermark witness
+        self.leaf_overflow: Dict[int, int] = {l: 0 for l in active_leaves}
+        self.tuples_out = 0
+        self.rounds = 0
+
+    @property
+    def overflow(self) -> int:
+        return int(self.state.overflow)
+
+    # -- membership ----------------------------------------------------------
+    def _mask(self, leaf: int):
+        import jax.numpy as jnp
+        m = np.zeros((self.max_leaves,), bool)
+        m[leaf] = True
+        return jnp.asarray(m)
+
+    def add_leaf(self, leaf: int, gamma: int) -> None:
+        self.state = scalegate.add_sources(self.state, self._mask(leaf),
+                                           gamma)
+        self.leaf_overflow.setdefault(leaf, 0)
+
+    def remove_leaf(self, leaf: int) -> None:
+        self.state = scalegate.remove_sources(self.state, self._mask(leaf))
+
+    def clamp_leaf(self, leaf: int, gamma: int) -> None:
+        """The leaf gained a migrated source with safe bound gamma."""
+        self.state = scalegate.ScaleGateState(
+            stash=self.state.stash,
+            wmark=wm.clamp_frontier(self.state.wmark, self._mask(leaf),
+                                    gamma),
+            overflow=self.state.overflow)
+
+    def apply_pre(self, root_ops: Sequence) -> None:
+        for op in root_ops:
+            if op[0] == "add_leaf":
+                self.add_leaf(op[1], op[2])
+            elif op[0] == "clamp":
+                self.clamp_leaf(op[1], op[2])
+
+    def apply_post(self, root_ops: Sequence) -> None:
+        for op in root_ops:
+            if op[0] == "remove_leaf":
+                self.remove_leaf(op[1])
+
+    # -- the merge -----------------------------------------------------------
+    def push(self, outs: Sequence[LeafOut]) -> T.TupleBatch:
+        """Merge one round of leaf outputs; returns the root-ready batch
+        (static ``cap + bucket`` lanes, validity-masked, totally ordered).
+        """
+        import jax.numpy as jnp
+
+        reports = np.full((self.max_leaves,), -1, np.int64)
+        rmask = np.zeros((self.max_leaves,), bool)
+        for o in outs:
+            reports[o.leaf_id] = max(reports[o.leaf_id], o.wmark)
+            rmask[o.leaf_id] = True
+            prev = self.leaf_overflow.get(o.leaf_id, 0)
+            if o.overflow > prev:
+                warnings.warn(
+                    f"ingest leaf {o.leaf_id} stash overflow: "
+                    f"{o.overflow} tuples dropped (was {prev})",
+                    RuntimeWarning, stacklevel=2)
+            self.leaf_overflow[o.leaf_id] = max(prev, o.overflow)
+
+        incoming_np = concat_np([o.ready for o in outs],
+                                self.kmax, self.payload_width)
+        n = incoming_np["tau"].shape[0]
+        incoming = np_to_batch(pad_np(incoming_np, bucket(n, self.out_pad)))
+
+        wstate = wm.observe_explicit(self.state.wmark,
+                                     jnp.asarray(reports, jnp.int32),
+                                     jnp.asarray(rmask))
+        prev_overflow = self.overflow
+        self.state, out = self._push(self.state, incoming, wstate)
+
+        # -- invariants (cheap host checks on every round) ----------------
+        w = int(self.state.wmark.value())
+        if w < self.wmark:
+            raise AssertionError(
+                f"root watermark regressed: {self.wmark} -> {w}")
+        self.wmark = w
+        tau = np.asarray(out.tau)
+        valid = np.asarray(out.valid)
+        if valid.any():
+            emitted = tau[valid]
+            if int(emitted[0]) < self.last_emitted_tau:
+                raise AssertionError(
+                    "root ready stream not totally ordered: emitted "
+                    f"tau {int(emitted[0])} after {self.last_emitted_tau}")
+            if (np.diff(emitted) < 0).any():
+                raise AssertionError("root ready batch not tau-sorted")
+            self.last_emitted_tau = int(emitted[-1])
+            self.tuples_out += int(valid.sum())
+        if self.overflow > prev_overflow:
+            warnings.warn(
+                f"ingest root stash overflow: {self.overflow} tuples "
+                f"dropped (was {prev_overflow})", RuntimeWarning,
+                stacklevel=2)
+        self.rounds += 1
+        return out

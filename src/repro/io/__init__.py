@@ -10,12 +10,13 @@ controllers consume (``core.async_runtime`` closes the loop).
 """
 
 from repro.io.metrics import MetricsBus
-from repro.io.queues import BoundedQueue
+from repro.io.queues import TIMEOUT, BoundedQueue, QueueClosed
 from repro.io.sinks import CollectSink, NullSink
 from repro.io.sources import (RateSchedule, ReplaySource, SyntheticSource,
                               load_stream, save_stream)
 
 __all__ = [
-    "BoundedQueue", "CollectSink", "MetricsBus", "NullSink", "RateSchedule",
-    "ReplaySource", "SyntheticSource", "load_stream", "save_stream",
+    "BoundedQueue", "CollectSink", "MetricsBus", "NullSink", "QueueClosed",
+    "RateSchedule", "ReplaySource", "SyntheticSource", "TIMEOUT",
+    "load_stream", "save_stream",
 ]

@@ -6,6 +6,21 @@ the queue is full — a slow consumer therefore stalls the *producer*, never
 grows memory (the test contract: depth never exceeds ``cap``), and the
 observed depth is itself a load signal the controllers consume (a full
 queue means the pipeline is not keeping up with the offered rate).
+
+``get`` disambiguates its three outcomes explicitly:
+
+* an item            — normal delivery (FIFO);
+* raises QueueClosed — the queue is closed *and* drained: the stream has
+  genuinely ended (items enqueued before ``close`` are always delivered
+  first);
+* returns TIMEOUT    — the wait timed out with the queue still open: the
+  caller may retry, poll something else, or give up.  The sentinel (not
+  ``None``, not an exception) keeps "no item yet" distinct from "no item
+  ever again" — conflating them made a slow producer look like end-of-
+  stream to pollers.
+
+Payloads may be any non-None value (``None`` is reserved to catch
+accidental sentinel payloads early).
 """
 
 from __future__ import annotations
@@ -16,15 +31,30 @@ from typing import Any, Optional
 
 
 class QueueClosed(Exception):
-    """put() after close() — the stream has ended."""
+    """put() after close(), or get() on a closed-and-drained queue."""
+
+
+class _Timeout:
+    """Singleton sentinel: ``get(timeout=...)`` expired, queue still open."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "<BoundedQueue.TIMEOUT>"
+
+
+TIMEOUT = _Timeout()
 
 
 class BoundedQueue:
     """Thread-safe FIFO with a hard capacity and blocking put/get.
 
-    ``get`` returns ``None`` once the queue is closed *and* drained, so a
-    consumer loop is simply ``while (item := q.get()) is not None``.
-    Payloads must therefore not be ``None`` themselves.
+    A consumer loop is::
+
+        try:
+            while True:
+                item = q.get()
+                ...
+        except QueueClosed:
+            pass            # stream ended, everything was delivered
     """
 
     def __init__(self, cap: int):
@@ -58,16 +88,19 @@ class BoundedQueue:
             self.high_water = max(self.high_water, len(self._items))
             self._cv.notify_all()
 
-    def get(self, timeout: Optional[float] = None) -> Optional[Any]:
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """Next item (FIFO).  Raises ``QueueClosed`` once closed and
+        drained; returns the ``TIMEOUT`` sentinel if ``timeout`` elapses
+        with the queue still open."""
         with self._cv:
             if not self._cv.wait_for(
                     lambda: self._closed or self._items, timeout=timeout):
-                raise TimeoutError("BoundedQueue.get timed out")
+                return TIMEOUT
             if self._items:
                 item = self._items.popleft()
                 self._cv.notify_all()
                 return item
-            return None               # closed and drained
+            raise QueueClosed      # closed and drained
 
     def close(self) -> None:
         with self._cv:

@@ -23,10 +23,17 @@ latency p50/p99, the reconfiguration trace, and detection→switch latency.
   (``MeshPipeline``; emulate devices with
   ``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
 * ``--record F.npz`` / ``--replay F.npz`` save / replay the exact tick
-  stream (event times intact) via ``io.sources``.
+  stream (event times intact) via ``io.sources``;
+* ``--ingest-hosts N``  spreads the workload over N physical sources and
+  merges them through the hierarchical multi-host ScaleGate
+  (``repro.ingest.IngestTier``, one leaf gate per ingest host) upstream of
+  the runtime — the tier's totally-ordered ready stream is what
+  ``AsyncStreamRuntime`` stages, and its output set is asserted against
+  the single-ScaleGate oracle after the run.
 """
 
 import argparse
+import dataclasses
 import sys
 
 import numpy as np
@@ -70,11 +77,18 @@ def make_stream(args):
         return src
     rng = np.random.default_rng(args.seed)
     batches = []
+    tau_base = 0
     for i in range(args.ticks):
         rate = sched.rate_at(i)
-        batches += list(datagen.tweets(
+        (b,) = datagen.tweets(
             rng, n_ticks=1, tick=args.tick, words_per_tweet=3, vocab=2000,
-            k_virt=K_VIRT, rate_per_tick=max(int(rate) // 10, 1)))
+            k_virt=K_VIRT, rate_per_tick=max(int(rate) // 10, 1),
+            n_sources=max(args.ingest_hosts, 1))
+        # each tweets() call restarts event time at 0; shift so the stream
+        # stays timestamp-sorted end to end (the ScaleGate source contract)
+        b = dataclasses.replace(b, tau=b.tau + tau_base)
+        tau_base = int(np.asarray(b.tau).max()) + 1
+        batches.append(b)
     if args.record:
         save_stream(args.record, batches)
         print(f"# recorded {len(batches)} ticks -> {args.record}")
@@ -85,16 +99,16 @@ def make_stream(args):
 
 
 def make_pipe(args, n_max, n_active):
+    n_inputs = max(getattr(args, "n_sources", args.ingest_hosts), 1)
+    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2,
+                         n_inputs=n_inputs)
+    stash = args.tick * 4 if args.ingest_hosts else args.tick
     if args.mesh:
         from repro.launch.mesh import make_stream_mesh
-        return MeshPipeline(count_aggregate(WS, k_virt=K_VIRT, out_cap=1024,
-                                            extra_slots=2),
-                            make_stream_mesh(args.mesh), stash_cap=args.tick,
+        return MeshPipeline(op, make_stream_mesh(args.mesh), stash_cap=stash,
                             mode="fast-agg", agg_kind="count",
                             n_max=n_max, n_active=n_active)
-    return VSNPipeline(count_aggregate(WS, k_virt=K_VIRT, out_cap=1024,
-                                       extra_slots=2),
-                       n_max=n_max, n_active=n_active, stash_cap=args.tick)
+    return VSNPipeline(op, n_max=n_max, n_active=n_active, stash_cap=stash)
 
 
 def main(argv=None):
@@ -112,6 +126,9 @@ def main(argv=None):
     ap.add_argument("--mesh", type=int, default=0)
     ap.add_argument("--record", default=None)
     ap.add_argument("--replay", default=None)
+    ap.add_argument("--ingest-hosts", type=int, default=0,
+                    help="merge the stream through a hierarchical "
+                         "multi-host ScaleGate with N leaf gates")
     args = ap.parse_args(argv)
 
     if args.mesh and len(jax.devices()) < args.mesh:
@@ -121,6 +138,34 @@ def main(argv=None):
         return 0
 
     src = make_stream(args)
+    tier = None
+    if args.ingest_hosts:
+        from repro.ingest import IngestTier
+        if args.replay:
+            # the recording fixes the source-id space; the tier must merge
+            # whatever was recorded, not what --ingest-hosts assumes
+            n_sources = 1 + max(
+                (int(np.asarray(b.source).max()) for b in src.batches),
+                default=0)
+        else:
+            n_sources = args.ingest_hosts
+        args.n_sources = n_sources
+        raw_batches = []
+
+        def recording(stream):
+            # stream lazily (a --pace source must pace the *router*, not a
+            # startup materialization) while keeping the raw ticks for the
+            # post-run single-gate-oracle check
+            for b in stream:
+                raw_batches.append(b)
+                yield b
+
+        tier = IngestTier(recording(src), n_sources, args.ingest_hosts,
+                          worker="thread", leaf_cap=args.tick,
+                          root_cap=2 * args.tick, record=True,
+                          out_pad=2 * args.tick,
+                          schedule=getattr(src, "schedule", None))
+        src = tier
     ctl = make_controller(args.controller, args.n_max)
     pipe = make_pipe(args, args.n_max, 2)
     # CollectSink retains every tick's device outputs for the parity
@@ -131,15 +176,29 @@ def main(argv=None):
                             queue_cap=args.queue_cap)
     report = rt.run()
     print(f"[live/async] {report.summary()}")
+    if tier is not None:
+        from repro.ingest import collect_tuples, single_gate_stream
+        st = tier.stats()
+        print(f"[live/ingest] {st.summary()}")
+        oracle = single_gate_stream(raw_batches, args.n_sources,
+                                    cap=3 * args.tick)
+        assert (collect_tuples(tier.emitted) == collect_tuples(oracle)), \
+            "ingest tier diverged from the single-gate oracle"
+        print(f"[live/ingest] tier output == single-ScaleGate oracle over "
+              f"{st.tuples_out} tuples")
     if report.reconfig_trace:
         trace = ", ".join(f"t{t}->pi{rc.n_active}"
                           for t, rc in report.reconfig_trace)
         print(f"[live/async] reconfig trace: {trace}")
     if need_outputs:
         outs = rt.sink.results()
-        batches = (list(src.batches) if isinstance(src, ReplaySource)
-                   else list(make_stream(argparse.Namespace(
-                       **{**vars(args), "pace": False, "record": None}))))
+        if tier is not None:
+            batches = list(tier.emitted)   # the merged stream the runtime saw
+        elif isinstance(src, ReplaySource):
+            batches = list(src.batches)
+        else:
+            batches = list(make_stream(argparse.Namespace(
+                **{**vars(args), "pace": False, "record": None})))
 
     if args.compare_sync:
         sync_pipe = make_pipe(args, args.n_max, 2)

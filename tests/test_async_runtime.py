@@ -28,8 +28,9 @@ from repro.core.runtime import VSNPipeline
 from repro.core.vsn import merge_fast_state
 from repro.core.windows import WindowSpec
 from repro.data import datagen
-from repro.io import (BoundedQueue, RateSchedule, ReplaySource,
-                      SyntheticSource, load_stream, save_stream)
+from repro.io import (TIMEOUT, BoundedQueue, QueueClosed, RateSchedule,
+                      ReplaySource, SyntheticSource, load_stream,
+                      save_stream)
 
 K = 64
 WS = WindowSpec(wa=50, ws=100, wt="multi")
@@ -208,13 +209,16 @@ def test_bounded_queue_backpressure_slow_consumer():
 
     t = threading.Thread(target=produce)
     t.start()
-    while True:
-        depths.append(q.depth)
-        item = q.get(timeout=5)
-        if item is None:
-            break
-        seen.append(item)
-        time.sleep(0.002)           # slow consumer
+    try:
+        while True:
+            depths.append(q.depth)
+            item = q.get(timeout=5)
+            if item is TIMEOUT:
+                pytest.fail("starved: producer made no progress in 5s")
+            seen.append(item)
+            time.sleep(0.002)       # slow consumer
+    except QueueClosed:
+        pass
     t.join()
     assert seen == list(range(20))  # FIFO, nothing lost
     assert q.high_water <= 3        # never exceeded the cap
@@ -223,12 +227,28 @@ def test_bounded_queue_backpressure_slow_consumer():
 
 
 def test_bounded_queue_put_after_close_raises():
-    from repro.io.queues import QueueClosed
     q = BoundedQueue(2)
     q.close()
     with pytest.raises(QueueClosed):
         q.put(1)
-    assert q.get() is None
+    with pytest.raises(QueueClosed):
+        q.get()
+
+
+def test_bounded_queue_get_disambiguates_timeout_from_close():
+    """Regression (ISSUE-4 satellite): ``get`` used to look the same on a
+    timed-out wait and on end-of-stream.  Now: TIMEOUT sentinel while the
+    queue is open, items enqueued before close still drain, and only the
+    drained+closed queue raises QueueClosed."""
+    q = BoundedQueue(2)
+    assert q.get(timeout=0.01) is TIMEOUT      # open + empty: not an end
+    q.put("a")
+    q.put("b")
+    q.close()
+    assert q.get(timeout=0.01) == "a"          # close never loses items
+    assert q.get() == "b"
+    with pytest.raises(QueueClosed):           # ...and only then ends
+        q.get(timeout=0.01)
 
 
 def test_runtime_queue_respects_cap():
