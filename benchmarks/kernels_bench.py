@@ -5,11 +5,13 @@ Each kernel is timed at the session backend (``benchmarks.run --backend``,
 the jnp ref oracles compile natively; ``pallas`` on TPU) alongside the ref
 oracle, so one harness produces comparable rows on any host."""
 
+import time
+
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.kernels import dispatch
+from repro.kernels import dispatch, lowering
 from repro.kernels.window_join.ops import window_join_op, window_join_ref_op
 from repro.kernels.segment_aggregate.ops import segment_aggregate_op
 from repro.kernels.scalegate_merge.ops import scalegate_merge_op
@@ -17,9 +19,26 @@ from repro.kernels.flash_attention.ops import flash_attention_op
 from repro.kernels.linear_scan.ops import linear_scan_op
 
 
+def lint_row():
+    """Mosaic-lowering lint as a gating bench row: any kernel regressing to
+    a rank-1 BlockSpec / 1-D iota flips the row to FAIL and run.py exits
+    nonzero (same contract as the parity rows)."""
+    t0 = time.perf_counter()
+    reports = lowering.lint_registered()
+    us = (time.perf_counter() - t0) * 1e6
+    bad = sorted(n for n, r in reports.items() if not r.ok)
+    # a kernel registered for dispatch but missing a lint case must FAIL
+    # too — otherwise the gate silently narrows when an ops import moves
+    bad += sorted(set(dispatch.registered()) - set(reports))
+    status = "FAIL:" + ";".join(bad) if bad else \
+        f"mosaic_lint_ok={len(reports)}/{len(dispatch.registered())}"
+    emit("kern_lowering_lint", us, status)
+
+
 def main():
     backend = dispatch.default_backend()
     rng = np.random.default_rng(0)
+    lint_row()
 
     B, K, R, P = 128, 512, 16, 4
     nt = np.sort(rng.integers(0, 1000, B)).astype(np.int32)

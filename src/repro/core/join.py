@@ -129,7 +129,10 @@ def band_join_counts(st: "FastJoinState", ready: T.TupleBatch,
     The kernel has no validity input, so invalid/control lanes (the padding
     of a static ScaleGate batch) are neutralized by pushing their tau past
     every stored tuple's freshness horizon — they match nothing and count
-    no comparisons, same as ``tick_fast``'s ``live_in`` mask.
+    no comparisons, same as ``tick_fast``'s ``live_in`` mask.  The kernel
+    applies the identical trick to sublane-align the incoming block (B is
+    padded to a multiple of 8 with INF_TIME lanes), so any ready-batch
+    size dispatches cleanly on every backend.
     """
     from repro.core.watermark import INF_TIME
     from repro.kernels.window_join.ops import window_join_op

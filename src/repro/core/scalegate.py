@@ -105,8 +105,10 @@ def merge_order(tau: jax.Array, source: jax.Array, valid: jax.Array,
     ``(tau, source, arrival)``.  The Pallas backends run the
     ``scalegate_merge`` bitonic network, which orders by ``(tau, arrival)``;
     both are valid ScaleGate total orders (see ``TIE_BREAK`` above).  The
-    kernel requires a power-of-two batch; non-power-of-two batches fall
-    back to the argsort path (and thus to the xla tie-break).
+    kernel itself now pads any batch to a power-of-two (rows, 128) tile
+    internally (the Mosaic-ready 2-D layout), but non-power-of-two batches
+    still take the argsort path here so their tie-break stays pinned to
+    the documented xla contract.
     """
     from repro.kernels import dispatch
 

@@ -36,6 +36,7 @@ BACKENDS = ("pallas", "pallas-interpret", "xla")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_LINT_CASES: Dict[str, Callable] = {}
 _DEFAULT_BACKEND: Optional[str] = None
 
 
@@ -116,3 +117,17 @@ def lookup(name: str, backend: Optional[str] = None) -> Callable:
 def registered() -> Dict[str, tuple]:
     """name -> tuple of available backends (introspection/tests)."""
     return {k: tuple(sorted(v)) for k, v in _REGISTRY.items()}
+
+
+def register_lint(name: str, case_fn: Callable) -> None:
+    """Register a kernel's Mosaic-lowering lint hook: a zero-arg factory
+    returning a ``repro.kernels.lowering.KernelCase`` (factory, so the
+    example arrays are only materialized when the lint actually runs).
+    Every ``register_kernel`` caller must also register a lint case —
+    ``tests/test_lowering_lint.py`` enforces the pairing."""
+    _LINT_CASES[name] = case_fn
+
+
+def lint_cases() -> Dict[str, Callable]:
+    """name -> KernelCase factory for every lint-registered kernel."""
+    return dict(_LINT_CASES)

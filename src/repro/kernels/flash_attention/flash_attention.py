@@ -10,6 +10,11 @@ indexed q_head // group).
 Tiling: per step VMEM holds (BQ,D) q + (BK,D) k,v + (BQ,BK) logits +
 (BQ,D) acc — e.g. BQ=BK=512, D=128 f32: ~1.8 MB, well under VMEM; matmul
 dims are 128-aligned for the MXU.
+
+Mosaic-ready by construction (ISSUE 5): every BlockSpec/out_shape is
+rank-3, the position masks use 2-D ``broadcasted_iota`` only, and the grid
+carries explicit dimension semantics — (batch*head, q) parallel, kv
+``arbitrary`` (the running-softmax scratch makes it sequential).
 """
 
 from __future__ import annotations
@@ -20,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lowering import tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -73,6 +80,31 @@ def _kernel(scale, causal, window, blk_q, blk_k, seq_kv,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def pallas_specs(bh: int, sq: int, skv: int, d: int, blk_q: int, blk_k: int,
+                 dtype=jnp.float32):
+    """Grid/Block/out structure, shared with the lowering lint."""
+    specs = dict(
+        grid=(bh, sq // blk_q, skv // blk_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((blk_q, d), jnp.float32),   # running accumulator
+        ],
+    )
+    params = tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    if params is not None:
+        specs["compiler_params"] = params
+    return specs
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     blk_q: int = 128, blk_k: int = 128,
                     interpret: bool = False):
@@ -83,23 +115,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     blk_k = min(blk_k, skv)
     assert sq % blk_q == 0 and skv % blk_k == 0
     scale = d ** -0.5
-    grid = (bh, sq // blk_q, skv // blk_k)
 
     kern = functools.partial(_kernel, scale, causal, window, blk_q, blk_k, skv)
     return pl.pallas_call(
         kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((blk_q, 1), jnp.float32),   # running max
-            pltpu.VMEM((blk_q, 1), jnp.float32),   # running denom
-            pltpu.VMEM((blk_q, d), jnp.float32),   # running accumulator
-        ],
+        **pallas_specs(bh, sq, skv, d, blk_q, blk_k, q.dtype),
         interpret=interpret,
     )(q, k, v)

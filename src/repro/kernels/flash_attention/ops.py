@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.flash_attention import (flash_attention,
+                                                           pallas_specs)
 from repro.kernels.flash_attention.ref import attention_ref
 
 
@@ -22,6 +23,22 @@ def _xla(q, k, v, *, causal, window, blk_q=None, blk_k=None):
 
 
 dispatch.register_kernel("flash_attention", pallas=flash_attention, xla=_xla)
+
+
+def _lowering_case():
+    from repro.kernels import lowering
+    bh, sq, skv, d, blk = 2, 128, 128, 128, 128
+    return lowering.KernelCase(
+        "flash_attention",
+        fn=functools.partial(flash_attention, causal=True, window=32,
+                             blk_q=blk, blk_k=blk),
+        args=(jnp.zeros((bh, sq, d), jnp.float32),
+              jnp.zeros((bh, skv, d), jnp.float32),
+              jnp.zeros((bh, skv, d), jnp.float32)),
+        specs=pallas_specs(bh, sq, skv, d, blk, blk))
+
+
+dispatch.register_lint("flash_attention", _lowering_case)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -17,6 +17,12 @@ inter-chunk dependency is irreducibly sequential; the intra-chunk work is
 what the VPU parallelizes (vectorized over Dk x Dv).  A matmul
 (intra-chunk-attention) formulation is a further MXU optimization recorded
 in EXPERIMENTS.md §Perf.
+
+Mosaic-ready by construction (ISSUE 5): rank-3 BlockSpecs/out_shape, no
+iota at all (time stepping is ``dynamic_slice``), rank-1-free dot_generals
+with explicit ``preferred_element_type``, and grid dimension semantics
+(BH parallel, the chunk axis ``arbitrary`` — the carried state scratch
+makes it sequential).
 """
 
 from __future__ import annotations
@@ -27,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lowering import tpu_compiler_params
 
 
 def _kernel(chunk, use_bonus, r_ref, k_ref, v_ref, w_ref, u_ref, o_ref,
@@ -49,14 +57,18 @@ def _kernel(chunk, use_bonus, r_ref, k_ref, v_ref, w_ref, u_ref, o_ref,
         vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)       # [1, Dv]
         rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)       # [1, Dk]
         wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)       # [1, Dk]
-        kv = kt.T @ vt                                      # [Dk, Dv]
+        # outer product k_t^T v_t on the MXU: contract the length-1 time dim
+        kv = jax.lax.dot_general(kt, vt, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Dk, Dv]
         if use_bonus:
             att = s + u.T * kv
         else:
             att = s
-        ot = rt @ att                                       # [1, Dv]
+        ot = jax.lax.dot_general(rt, att, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [1, Dv]
         s = wt.T * s + kv
-        out = jax.lax.dynamic_update_slice_in_dim(out, ot, t, 0)
+        out = jax.lax.dynamic_update_slice_in_dim(out, ot.astype(out.dtype),
+                                                  t, 0)
         return s, out
 
     s0 = state_ref[...]
@@ -64,6 +76,29 @@ def _kernel(chunk, use_bonus, r_ref, k_ref, v_ref, w_ref, u_ref, o_ref,
     s, out = jax.lax.fori_loop(0, chunk, step, (s0, out0))
     state_ref[...] = s
     o_ref[0] = out
+
+
+def pallas_specs(bh: int, t: int, dk: int, dv: int, chunk: int,
+                 dtype=jnp.float32):
+    """Grid/Block/out structure, shared with the lowering lint."""
+    specs = dict(
+        grid=(bh, t // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dv), dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+    )
+    params = tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    if params is not None:
+        specs["compiler_params"] = params
+    return specs
 
 
 def linear_scan(r, k, v, w, u=None, *, chunk: int = 64,
@@ -77,21 +112,10 @@ def linear_scan(r, k, v, w, u=None, *, chunk: int = 64,
     if u is None:
         u = jnp.zeros((bh, dk), r.dtype)
     u = u[:, None, :]  # [BH, 1, Dk]
-    grid = (bh, t // chunk)
 
     kern = functools.partial(_kernel, chunk, use_bonus)
     return pl.pallas_call(
         kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, 1, dk), lambda b, c: (b, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
-        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        **pallas_specs(bh, t, dk, dv, chunk, r.dtype),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -3,9 +3,10 @@
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from repro.kernels.linear_scan.linear_scan import linear_scan
+from repro.kernels.linear_scan.linear_scan import linear_scan, pallas_specs
 from repro.kernels.linear_scan.ref import linear_scan_ref
 
 
@@ -15,6 +16,23 @@ def _xla(r, k, v, w, u=None, *, chunk=None):
 
 
 dispatch.register_kernel("linear_scan", pallas=linear_scan, xla=_xla)
+
+
+def _lowering_case():
+    from repro.kernels import lowering
+    bh, t, dk, dv, chunk = 2, 128, 128, 128, 64
+    return lowering.KernelCase(
+        "linear_scan",
+        fn=functools.partial(linear_scan, chunk=chunk),
+        args=(jnp.zeros((bh, t, dk), jnp.float32),
+              jnp.zeros((bh, t, dk), jnp.float32),
+              jnp.zeros((bh, t, dv), jnp.float32),
+              jnp.full((bh, t, dk), 0.9, jnp.float32),
+              jnp.zeros((bh, dk), jnp.float32)),    # bonus path (rwkv6)
+        specs=pallas_specs(bh, t, dk, dv, chunk))
+
+
+dispatch.register_lint("linear_scan", _lowering_case)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "backend"))

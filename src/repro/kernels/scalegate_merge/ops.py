@@ -3,13 +3,30 @@
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.scalegate_merge.ref import scalegate_merge_ref
-from repro.kernels.scalegate_merge.scalegate_merge import scalegate_merge
+from repro.kernels.scalegate_merge.scalegate_merge import (LANES,
+                                                           pallas_specs,
+                                                           scalegate_merge)
 
 dispatch.register_kernel("scalegate_merge",
                          pallas=scalegate_merge, xla=scalegate_merge_ref)
+
+
+def _lowering_case():
+    from repro.kernels import lowering
+    n = 2 * LANES                       # representative padded tick
+    return lowering.KernelCase(
+        "scalegate_merge",
+        fn=functools.partial(scalegate_merge, n_sources=4),
+        args=(jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+              jnp.ones((n,), jnp.int32)),
+        specs=pallas_specs(n // LANES))
+
+
+dispatch.register_lint("scalegate_merge", _lowering_case)
 
 
 @functools.partial(jax.jit, static_argnames=("n_sources", "backend"))

@@ -11,8 +11,22 @@ tie-break rides along as the carried index — so the sort is
 stable-deterministic over the full int32 tau range (no packed-key
 composite, no overflow restriction).
 
+Mosaic-ready layout (ISSUE 5): the tick lives in VMEM as a rank-2
+``(rows, 128)`` tile — the lane dim is the TPU vector lane dim — and every
+compare-exchange pass is a *roll*: the bitonic partner of flat lane ``p``
+at stride ``s`` is ``p ^ s``, which for the lanes with bit ``s`` clear is
+``p + s`` (one roll left) and for the rest ``p - s`` (one roll right).
+Strides below 128 roll the lane axis, strides at/above 128 roll the
+sublane axis — no rank-1 iota, no gathers, no lane-dim reshapes, which is
+exactly what the Mosaic lowering path needs (``pltpu.roll`` is the native
+lane rotation).  The carried triple is ``(key, lane, valid)`` so readiness
+never gathers back through the permutation.
+
 Single-program kernel (ticks are small: <= 4K lanes), entire tick resident
-in VMEM; the bitonic network is log^2(n) masked min/max passes — pure VPU.
+in VMEM.  ``scalegate_merge`` pads any batch to the next power of two of
+at least 128 lanes; padding lanes carry ``(INF_TIME, lane >= n)`` keys, so
+they sort strictly after every real lane and the first ``n`` sorted
+positions are exactly the unpadded order.
 """
 
 from __future__ import annotations
@@ -22,88 +36,130 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.watermark import INF_TIME
 
+LANES = 128                     # TPU vector lane width (last-dim tile)
 
-def _bitonic_sort(keys, idx):
-    """In-register bitonic sort of (keys, idx); n = power of two.
 
-    Each compare-exchange pass is expressed as a reshape to
-    ``[n/(2*stride), 2, stride]``: the two partner lanes (``lane ^ stride``)
-    land in the middle axis, so the exchange is a vectorized select
-    instead of an n-way per-lane gather (``keys[partner]``) — the gather form
-    lowers to n scalar loads per pass under the Pallas interpreter and is
-    what made interpret-mode runs minutes-long.  Equal keys tie-break on the
-    carried original lane (``idx``), making the order total and stable over
-    the whole int32 key range.
+def _roll(x, shift, axis):
+    """Circular shift; ``pltpu.roll`` is the Mosaic-native lane rotation
+    (its shift must be non-negative, so normalize mod the axis size)."""
+    return pltpu.roll(x, shift % x.shape[axis], axis)
+
+
+def _cmp_exchange(key, idx, val, stride, asc):
+    """One bitonic compare-exchange pass over the row-major (R, 128) tile.
+
+    ``stride`` pairs flat lane ``p`` with ``p ^ stride``; ``asc`` is the
+    per-lane ascending-block mask of the enclosing stage.  The pass is two
+    rolls + selects per carried array: lanes with the stride bit clear
+    read their partner ``stride`` ahead, the others ``stride`` behind.
     """
-    n = keys.shape[0]
-    stages = n.bit_length() - 1
-    for stage in range(stages):
-        for sub in range(stage, -1, -1):
-            stride = 1 << sub
-            groups = n // (2 * stride)
-            ks = keys.reshape(groups, 2, stride)
-            ix = idx.reshape(groups, 2, stride)
-            lo_k, hi_k = ks[:, 0], ks[:, 1]
-            lo_i, hi_i = ix[:, 0], ix[:, 1]
-            # block direction: ascending iff bit (stage+1) of the lane is 0;
-            # constant within a group (2*stride <= 2^(stage+1), aligned).
-            first_lane = (jax.lax.broadcasted_iota(jnp.int32, (groups, 1), 0)
-                          * (2 * stride))
-            dir_up = (first_lane & (1 << (stage + 1))) == 0
-            lex_gt = (lo_k > hi_k) | ((lo_k == hi_k) & (lo_i > hi_i))
-            lex_lt = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_i < hi_i))
-            swap = jnp.where(dir_up, lex_gt, lex_lt)
-            new_lo_k = jnp.where(swap, hi_k, lo_k)
-            new_hi_k = jnp.where(swap, lo_k, hi_k)
-            new_lo_i = jnp.where(swap, hi_i, lo_i)
-            new_hi_i = jnp.where(swap, lo_i, hi_i)
-            keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
-            idx = jnp.stack([new_lo_i, new_hi_i], axis=1).reshape(n)
-    return keys, idx
+    r, c = key.shape
+    if stride >= c:
+        axis, sh = 0, stride // c
+        coord = jax.lax.broadcasted_iota(jnp.int32, (r, c), 0)
+    else:
+        axis, sh = 1, stride
+        coord = jax.lax.broadcasted_iota(jnp.int32, (r, c), 1)
+    is_lo = (coord & sh) == 0
+
+    def partner(x):
+        return jnp.where(is_lo, _roll(x, -sh, axis), _roll(x, sh, axis))
+
+    pk, pi, pv = partner(key), partner(idx), partner(val)
+    # (key, idx) pairs are unique, so strict lexicographic > is total.
+    lex_gt = (key > pk) | ((key == pk) & (idx > pi))
+    # In an ascending block the lo lane keeps the smaller element (and the
+    # hi lane the larger); descending blocks mirror.  ``take`` selects the
+    # partner's element exactly when ours is on the wrong side.
+    take = jnp.where(asc == is_lo, lex_gt, ~lex_gt)
+    return (jnp.where(take, pk, key), jnp.where(take, pi, idx),
+            jnp.where(take, pv, val))
 
 
 def _kernel(n_sources, tau_ref, src_ref, valid_ref,
             order_ref, ready_ref, wmark_ref):
-    tau = tau_ref[...]
-    src = src_ref[...]
-    valid = valid_ref[...] != 0
-    n = tau.shape[0]
-    lane = jnp.arange(n)
+    tau = tau_ref[...]                    # [R, 128] i32
+    src = src_ref[...]                    # [R, 128] i32
+    valid = valid_ref[...]                # [R, 128] i32 (0/1)
+    r, c = tau.shape
+    vb = valid != 0
+    lane = (jax.lax.broadcasted_iota(jnp.int32, (r, c), 0) * c
+            + jax.lax.broadcasted_iota(jnp.int32, (r, c), 1))
 
     # Definition 3 watermark: min over sources of (max tau per source).
-    per_src_max = jnp.full((n_sources,), -1, jnp.int32)
-    src_onehot = (src[None, :] == jnp.arange(n_sources)[:, None]) & valid[None]
-    per_src_max = jnp.max(jnp.where(src_onehot, tau[None, :], -1), axis=1)
-    w = jnp.min(per_src_max)
-    wmark_ref[0] = w
+    # n_sources is static and small — an unrolled scalar min-of-max chain
+    # instead of a rank-1 per-source vector.
+    w = None
+    for s_id in range(n_sources):
+        s_max = jnp.max(jnp.where((src == s_id) & vb, tau, -1))
+        w = s_max if w is None else jnp.minimum(w, s_max)
+    wmark_ref[0, 0] = w
 
-    key = jnp.where(valid, tau, INF_TIME)
-    skey, order = _bitonic_sort(key, lane)
-    order_ref[...] = order
-    ready_ref[...] = jnp.where(valid[order] & (tau[order] <= w), 1, 0
+    key = jnp.where(vb, tau, INF_TIME)
+    idx = lane
+    val = valid
+    n = r * c
+    stages = n.bit_length() - 1
+    for stage in range(stages):
+        # block direction: ascending iff bit (stage+1) of the flat lane is
+        # 0 — constant within each 2^(stage+1)-aligned bitonic block.
+        asc = (lane & (1 << (stage + 1))) == 0
+        for sub in range(stage, -1, -1):
+            key, idx, val = _cmp_exchange(key, idx, val, 1 << sub, asc)
+
+    order_ref[...] = idx
+    # readiness without a gather: key == tau on valid lanes by construction.
+    ready_ref[...] = jnp.where((val != 0) & (key <= w), 1, 0
                                ).astype(jnp.int32)
+
+
+def pallas_specs(n_rows: int):
+    """The call's grid/Block/out structure — shared with the lowering lint
+    (kernels/lowering.py) so the linted shape can never drift from the
+    executed one.  Everything is rank >= 2 with a 128 lane dim."""
+    tile = (n_rows, LANES)
+    return dict(
+        grid=(1,),
+        in_specs=[pl.BlockSpec(tile, lambda i: (0, 0)),
+                  pl.BlockSpec(tile, lambda i: (0, 0)),
+                  pl.BlockSpec(tile, lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec(tile, lambda i: (0, 0)),
+                   pl.BlockSpec(tile, lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(tile, jnp.int32),
+                   jax.ShapeDtypeStruct(tile, jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+    )
 
 
 def scalegate_merge(tau, src, valid, *, n_sources: int,
                     interpret: bool = False):
+    """-> (order i32[N], ready i32[N], watermark i32[1]); any N >= 1.
+
+    N is padded internally to the next power of two of at least 128 lanes
+    and laid out as (N/128, 128); padding lanes are invalid with the
+    largest arrival indices, so they sort after every real lane and
+    ``order[:N]`` is exactly the unpadded (tau, arrival) total order.
+    """
     n = tau.shape[0]
-    assert n & (n - 1) == 0, "tick size must be a power of two"
+    n_pad = max(LANES, 1 << (n - 1).bit_length()) if n > 1 else LANES
+    valid = valid.astype(jnp.int32)
+    if n_pad != n:
+        tau = jnp.pad(tau, (0, n_pad - n))
+        src = jnp.pad(src, (0, n_pad - n))
+        valid = jnp.pad(valid, (0, n_pad - n))
+    rows = n_pad // LANES
 
     kern = functools.partial(_kernel, n_sources)
-    return pl.pallas_call(
+    order2, ready2, w2 = pl.pallas_call(
         kern,
-        grid=(1,),
-        in_specs=[pl.BlockSpec((n,), lambda i: (0,)),
-                  pl.BlockSpec((n,), lambda i: (0,)),
-                  pl.BlockSpec((n,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((n,), lambda i: (0,)),
-                   pl.BlockSpec((n,), lambda i: (0,)),
-                   pl.BlockSpec((1,), lambda i: (0,))],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
-                   jax.ShapeDtypeStruct((n,), jnp.int32),
-                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        **pallas_specs(rows),
         interpret=interpret,
-    )(tau, src, valid.astype(jnp.int32))
+    )(tau.reshape(rows, LANES), src.reshape(rows, LANES),
+      valid.reshape(rows, LANES))
+    return (order2.reshape(n_pad)[:n], ready2.reshape(n_pad)[:n],
+            w2.reshape(1))

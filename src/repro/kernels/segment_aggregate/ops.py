@@ -3,10 +3,12 @@
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
-from repro.kernels.segment_aggregate.segment_aggregate import segment_aggregate
+from repro.kernels.segment_aggregate.segment_aggregate import (pallas_specs,
+                                                               segment_aggregate)
 
 
 def _xla(keys, slots, vals, acc, *, tile_k=None):
@@ -16,6 +18,21 @@ def _xla(keys, slots, vals, acc, *, tile_k=None):
 
 dispatch.register_kernel("segment_aggregate",
                          pallas=segment_aggregate, xla=_xla)
+
+
+def _lowering_case():
+    from repro.kernels import lowering
+    n, w, k, s, tile_k = 128, 2, 256, 4, 128
+    return lowering.KernelCase(
+        "segment_aggregate",
+        fn=functools.partial(segment_aggregate, tile_k=tile_k),
+        args=(jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+              jnp.zeros((n, w), jnp.float32),
+              jnp.zeros((k, s, w), jnp.float32)),
+        specs=pallas_specs(n, w, k, s, tile_k))
+
+
+dispatch.register_lint("segment_aggregate", _lowering_case)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_k", "backend"))

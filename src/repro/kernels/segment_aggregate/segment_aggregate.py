@@ -10,6 +10,13 @@ conflicts by construction (a scatter-free formulation: the gather+mask turns
 the random scatter into dense VPU selects, which is the TPU-native shape of
 the paper's per-key f_R loop).
 
+Mosaic-ready layout (ISSUE 5): the hit block is lane-major — keys/slots
+enter as rank-2 ``(1, N)`` rows with N padded to a multiple of 128, the
+one-hot is built with a rank-2 ``broadcasted_iota`` over ``(TK*S, N)``
+(rows = flattened accumulator cells, lanes = hits), and the reduction is a
+single ``dot_general`` contracting the lane dim against ``vals [N, W]`` —
+the MXU shape, with no rank-1 BlockSpecs and no 1-D iota anywhere.
+
 Shapes
   keys   i32[N]      virtual key per hit (-1 = dead lane)
   slots  i32[N]      window slot per hit
@@ -19,7 +26,7 @@ out
   acc'   f32[K, S, W]
 
 Tiling: grid over K tiles; per step VMEM holds the (N,W) block + a
-(TK, S, W) accumulator tile.
+(TK, S, W) accumulator tile + the (TK*S, N) one-hot.
 """
 
 from __future__ import annotations
@@ -30,25 +37,47 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+LANES = 128                     # hit-block lane padding quantum
+
 
 def _kernel(n_slots, tile_k, keys_ref, slots_ref, vals_ref, acc_ref, out_ref):
     i = pl.program_id(0)
-    keys = keys_ref[...]                  # [N]
-    slots = slots_ref[...]                # [N]
+    keys = keys_ref[...]                  # [1, N]
+    slots = slots_ref[...]                # [1, N]
     vals = vals_ref[...]                  # [N, W]
     lo = i * tile_k
 
     local = keys - lo                     # key row within this tile
     in_tile = (local >= 0) & (local < tile_k) & (keys >= 0)
 
-    # dense one-hot accumulate: [N, TK*S] contributions -> sum over N.
-    # (TK*S is lane-dim friendly; the matmul form feeds the MXU.)
-    flat_idx = local * n_slots + slots
-    onehot = (flat_idx[:, None] == jnp.arange(tile_k * n_slots)[None, :])
-    onehot = jnp.where(in_tile[:, None], onehot, False)
-    contrib = jnp.dot(onehot.astype(vals.dtype).T, vals,
-                      preferred_element_type=jnp.float32)  # [TK*S, W]
-    out_ref[...] = acc_ref[...] + contrib.reshape(acc_ref.shape)
+    # dense one-hot accumulate: rows = flattened (key, slot) cells of this
+    # tile, lanes = hits; the dot_general contracts the hit lanes on the MXU.
+    flat_idx = local * n_slots + slots    # [1, N]
+    rows = jax.lax.broadcasted_iota(jnp.int32,
+                                    (tile_k * n_slots, keys.shape[1]), 0)
+    onehot = (rows == flat_idx) & in_tile           # [TK*S, N]
+    contrib = jax.lax.dot_general(
+        onehot.astype(vals.dtype), vals, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # [TK*S, W]
+    out_ref[...] = acc_ref[...] + contrib.reshape(out_ref.shape)
+
+
+def pallas_specs(n: int, w: int, k: int, s: int, tile_k: int,
+                 dtype=jnp.float32):
+    """Grid/Block/out structure, shared with the lowering lint.  The hit
+    block is broadcast to every program (same HBM block); the accumulator
+    tile walks the key axis.  All specs rank >= 2, hits lane-major."""
+    return dict(
+        grid=(k // tile_k,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),      # shared hit block
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, w), lambda i: (0, 0)),
+            pl.BlockSpec((tile_k, s, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_k, s, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, s, w), dtype),
+    )
 
 
 def segment_aggregate(keys, slots, vals, acc, *, tile_k: int = 128,
@@ -58,19 +87,18 @@ def segment_aggregate(keys, slots, vals, acc, *, tile_k: int = 128,
     assert w == w2
     tile_k = min(tile_k, k)
     assert k % tile_k == 0
-    grid = (k // tile_k,)
+
+    # lane-align the hit block: padding lanes carry key -1 (dead) and zero
+    # contribution, so every backend reduces the identical value.
+    n_pad = -(-n // LANES) * LANES
+    if n_pad != n:
+        keys = jnp.pad(keys, (0, n_pad - n), constant_values=-1)
+        slots = jnp.pad(slots, (0, n_pad - n))
+        vals = jnp.pad(vals, ((0, n_pad - n), (0, 0)))
 
     kern = functools.partial(_kernel, s, tile_k)
     return pl.pallas_call(
         kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((n,), lambda i: (0,)),          # shared hit block
-            pl.BlockSpec((n,), lambda i: (0,)),
-            pl.BlockSpec((n, w), lambda i: (0, 0)),
-            pl.BlockSpec((tile_k, s, w), lambda i: (i, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((tile_k, s, w), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, s, w), acc.dtype),
+        **pallas_specs(n_pad, w, k, s, tile_k, acc.dtype),
         interpret=interpret,
-    )(keys, slots, vals, acc)
+    )(keys.reshape(1, n_pad), slots.reshape(1, n_pad), vals, acc)

@@ -3,10 +3,11 @@
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.window_join.ref import window_join_ref
-from repro.kernels.window_join.window_join import window_join
+from repro.kernels.window_join.window_join import pallas_specs, window_join
 
 
 def _pallas(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
@@ -25,6 +26,23 @@ def _xla(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
 
 
 dispatch.register_kernel("window_join", pallas=_pallas, xla=_xla)
+
+
+def _lowering_case():
+    from repro.kernels import lowering
+    b, p, k, r, tile_k = 128, 2, 256, 16, 128
+    return lowering.KernelCase(
+        "window_join",
+        fn=functools.partial(window_join, ws=500, band=10.0, n_attrs=2,
+                             tile_k=tile_k),
+        args=(jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
+              jnp.zeros((b, p), jnp.float32),
+              jnp.full((k, r), -1, jnp.int32), jnp.zeros((k, r), jnp.int32),
+              jnp.zeros((k, r, p), jnp.float32)),
+        specs=pallas_specs(b, p, k, r, tile_k))
+
+
+dispatch.register_lint("window_join", _lowering_case)
 
 
 @functools.partial(jax.jit, static_argnames=("ws", "band", "n_attrs",

@@ -6,6 +6,13 @@ Each program owns a tile of virtual-key rows of the stored-tuple ring (its
 ``f_mu`` share, via the BlockSpec index map) and compares the whole incoming
 block against its tile: no tuple duplication, disjoint state, deterministic.
 
+Mosaic-ready layout (ISSUE 5): the per-tuple metadata enters as rank-2
+``(B, 1)`` columns (no rank-1 BlockSpecs), B is padded to the f32 sublane
+quantum with tau = INF_TIME lanes (past every freshness horizon: they match
+nothing and count no comparisons, the ``band_join_counts`` neutral
+element), and the kernel body is pure rank->=3 broadcasting — no iota at
+all.
+
 Shapes
   new_tau  i32[B]            incoming event times (timestamp-sorted tick)
   new_src  i32[B]            stream ids (0 = L, 1 = R)
@@ -34,22 +41,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.watermark import INF_TIME
+
+SUBLANES = 8                    # f32 sublane quantum for the incoming block
+
 
 def _kernel(ws, band, n_attrs,
             new_tau_ref, new_src_ref, new_pay_ref,
             st_tau_ref, st_src_ref, st_pay_ref,
             counts_ref, comps_ref):
-    new_tau = new_tau_ref[...]            # [B]
-    new_src = new_src_ref[...]            # [B]
+    new_tau = new_tau_ref[...]            # [B, 1]
+    new_src = new_src_ref[...]            # [B, 1]
     new_pay = new_pay_ref[...]            # [B, P]
     st_tau = st_tau_ref[...]              # [TK, R]
     st_src = st_src_ref[...]              # [TK, R]
     st_pay = st_pay_ref[...]              # [TK, R, P]
 
     # freshness + stream predicates: [B, TK, R]
-    fresh = st_tau[None] + ws >= new_tau[:, None, None]
+    fresh = st_tau[None] + ws >= new_tau[:, :, None]
     live = (st_tau[None] >= 0) & fresh
-    opp = live & (st_src[None] != new_src[:, None, None])
+    opp = live & (st_src[None] != new_src[:, :, None])
 
     # band predicate on the first n_attrs payload attributes
     ok = jnp.ones_like(opp)
@@ -62,23 +73,17 @@ def _kernel(ws, band, n_attrs,
     comps_ref[0, 0] = jnp.sum(opp.astype(jnp.int32))
 
 
-def window_join(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
-                ws: int, band: float = 10.0, n_attrs: int = 2,
-                tile_k: int = 128, interpret: bool = False):
-    b, p = new_pay.shape
-    k, r = st_tau.shape
-    tile_k = min(tile_k, k)
-    assert k % tile_k == 0
+def pallas_specs(b: int, p: int, k: int, r: int, tile_k: int):
+    """Grid/Block/out structure, shared with the lowering lint.  The
+    incoming block is broadcast to every program; the stored-ring tiles
+    walk the key axis.  All specs rank >= 2."""
     grid = (k // tile_k,)
-
-    kern = functools.partial(_kernel, ws, band, n_attrs)
-    return pl.pallas_call(
-        kern,
+    return dict(
         grid=grid,
         in_specs=[
             # the shared tuple block: every program maps the same HBM block
-            pl.BlockSpec((b,), lambda i: (0,)),
-            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
             pl.BlockSpec((b, p), lambda i: (0, 0)),
             # the program's key-row tile (its f_mu share)
             pl.BlockSpec((tile_k, r), lambda i: (i, 0)),
@@ -93,5 +98,31 @@ def window_join(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
             jax.ShapeDtypeStruct((b, k), jnp.int32),
             jax.ShapeDtypeStruct((grid[0], 1), jnp.int32),
         ],
+    )
+
+
+def window_join(new_tau, new_src, new_pay, st_tau, st_src, st_pay, *,
+                ws: int, band: float = 10.0, n_attrs: int = 2,
+                tile_k: int = 128, interpret: bool = False):
+    b, p = new_pay.shape
+    k, r = st_tau.shape
+    tile_k = min(tile_k, k)
+    assert k % tile_k == 0
+
+    # sublane-align the incoming block: tau = INF_TIME padding lanes fail
+    # every freshness test, so counts rows past b are sliced off and comps
+    # is untouched.
+    b_pad = -(-b // SUBLANES) * SUBLANES
+    if b_pad != b:
+        new_tau = jnp.pad(new_tau, (0, b_pad - b), constant_values=INF_TIME)
+        new_src = jnp.pad(new_src, (0, b_pad - b))
+        new_pay = jnp.pad(new_pay, ((0, b_pad - b), (0, 0)))
+
+    kern = functools.partial(_kernel, ws, band, n_attrs)
+    counts, comps = pl.pallas_call(
+        kern,
+        **pallas_specs(b_pad, p, k, r, tile_k),
         interpret=interpret,
-    )(new_tau, new_src, new_pay, st_tau, st_src, st_pay)
+    )(new_tau.reshape(b_pad, 1), new_src.reshape(b_pad, 1), new_pay,
+      st_tau, st_src, st_pay)
+    return counts[:b], comps

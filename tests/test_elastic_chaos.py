@@ -1,0 +1,188 @@
+"""Chaos/soak for the elastic ingest path (ISSUE 5 satellite).
+
+``tests/test_ingest_tier.py`` pins *scripted* membership changes; this
+module drives **seeded random** ``add_host``/``remove_host`` schedules —
+including command bursts on one tick boundary and the
+remove-host-during-backpressure interleaving the scripted tests never
+reach — and holds the tier to the same oracle: exact output-multiset
+parity with the flat single-ScaleGate run (which is also the static
+oracle: the schedule must change *nothing* about the delivered stream),
+total order, monotone watermark (RootMerge asserts it every round), zero
+tuple-state transfer, and measured attach/detach latency for every
+command.
+
+The tier-1 versions are short and deterministic (fixed seeds, membership
+simulated alongside the issued commands so every schedule is valid); the
+long randomized soak across many seeds and the process-worker transport
+lives behind ``@pytest.mark.slow``.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import datagen
+from repro.ingest import (IngestTier, collect_tuples, emitted_taus,
+                          single_gate_stream)
+
+K = 64
+N_SRC = 4
+
+
+def agg_stream(n_ticks=8, seed=0, tick=16):
+    rng = np.random.default_rng(seed)
+    return list(datagen.tweets(rng, n_ticks=n_ticks, tick=tick,
+                               words_per_tweet=3, vocab=300, k_virt=K,
+                               rate_per_tick=30, n_sources=N_SRC))
+
+
+def join_stream(n_ticks=8, seed=3, tick=16):
+    rng = np.random.default_rng(seed)
+    return list(datagen.scalejoin(rng, n_ticks=n_ticks, tick=tick, k_virt=1))
+
+
+def tier_kw(**over):
+    kw = dict(worker="thread", leaf_cap=32, root_cap=64, max_leaves=16)
+    kw.update(over)
+    return kw
+
+
+def chaos_commands(tier, rng, n_ticks, n_leaves, max_cmds=4):
+    """Issue a random but always-valid membership schedule on ``tier``.
+
+    Membership is simulated alongside (commands release in issue order at
+    nondecreasing tick boundaries, exactly like the tier's router), so a
+    remove always targets a live leaf and at least one leaf survives.
+    Returns the issued (kind, leaf_id, at_tick) triples.
+    """
+    members = set(range(n_leaves))
+    issued = []
+    for t in sorted(int(rng.integers(1, n_ticks)) for _ in range(max_cmds)):
+        if rng.random() < 0.5:
+            new = tier.add_host(at_tick=t)
+            members.add(new)
+            issued.append(("add", new, t))
+        elif len(members) > 1:
+            victim = sorted(members)[int(rng.integers(0, len(members)))]
+            tier.remove_host(victim, at_tick=t)
+            members.discard(victim)
+            issued.append(("remove", victim, t))
+    return issued
+
+
+def assert_chaos_invariants(tier, outs, issued, oracle_batches):
+    taus = emitted_taus(outs)
+    assert (np.diff(taus) >= 0).all(), "ready stream lost total order"
+    oracle = single_gate_stream(oracle_batches, N_SRC, cap=96)
+    assert collect_tuples(outs) == collect_tuples(oracle)
+    st = tier.stats()
+    assert st.tuples_out == st.tuples_in
+    assert st.total_overflow == 0
+    n_add = sum(1 for k, _, _ in issued if k == "add")
+    assert len(st.attach_ms) == n_add
+    assert len(st.detach_ms) == len(issued) - n_add
+    assert all(lat >= 0 for lat in st.attach_ms + st.detach_ms)
+
+
+# ------------------------------------------------------- tier-1 (short) --
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_schedule_parity(seed):
+    """Random membership churn, thread workers: the delivered stream is
+    tuple-for-tuple the static oracle's."""
+    batches = agg_stream(n_ticks=8, seed=seed)
+    tier = IngestTier(batches, N_SRC, 2, **tier_kw())
+    issued = chaos_commands(tier, np.random.default_rng(1000 + seed),
+                            n_ticks=8, n_leaves=2)
+    outs = list(tier)
+    assert_chaos_invariants(tier, outs, issued, batches)
+
+
+def test_chaos_schedule_parity_inline_worker():
+    """Same chaos schedule through the synchronous inline transport (no
+    threads): parity cannot depend on worker interleaving."""
+    batches = agg_stream(n_ticks=8, seed=5)
+    for worker in ("inline", "thread"):
+        tier = IngestTier(batches, N_SRC, 3, **tier_kw(worker=worker))
+        issued = chaos_commands(tier, np.random.default_rng(42),
+                                n_ticks=8, n_leaves=3)
+        outs = list(tier)
+        assert_chaos_invariants(tier, outs, issued, batches)
+
+
+def test_chaos_command_burst_single_tick():
+    """All commands released on one tick boundary (add+remove+add back to
+    back): each reconfig round applies alone, parity survives the burst."""
+    batches = agg_stream(n_ticks=6, seed=7)
+    tier = IngestTier(batches, N_SRC, 2, **tier_kw())
+    a = tier.add_host(at_tick=3)
+    tier.remove_host(0, at_tick=3)
+    b = tier.add_host(at_tick=3)
+    outs = list(tier)
+    assert_chaos_invariants(tier, outs,
+                            [("add", a, 3), ("remove", 0, 3), ("add", b, 3)],
+                            batches)
+    st = tier.stats()
+    assert 0 not in st.leaves and a in st.leaves and b in st.leaves
+
+
+def test_remove_host_during_backpressure():
+    """The interleaving test_ingest_tier.py doesn't reach: the consumer
+    stalls (bounded channels fill, leaves block on the root channel, the
+    router blocks on the leaf channels) while a remove_host releases —
+    the flush round must thread through the congested channels without
+    deadlock or parity loss."""
+    batches = agg_stream(n_ticks=10, seed=9)
+    tier = IngestTier(batches, N_SRC, 3, **tier_kw(chan_cap=1))
+    tier.remove_host(1, at_tick=4)
+    outs = []
+    for i, out in enumerate(tier):
+        if i < 6:
+            time.sleep(0.05)     # slow consumer: keep every channel full
+        outs.append(out)
+    assert_chaos_invariants(tier, outs, [("remove", 1, 4)], batches)
+    assert 1 not in tier.stats().leaves
+
+
+def test_chaos_join_stream_parity():
+    """The q3-style two-stream workload under churn (source = L/R: a
+    rebalance moves a whole stream side between leaves)."""
+    batches = join_stream(n_ticks=8)
+    tier = IngestTier(batches, 2, 2, **tier_kw())
+    tier.add_host(at_tick=2)
+    tier.remove_host(0, at_tick=5)
+    outs = list(tier)
+    taus = emitted_taus(outs)
+    assert (np.diff(taus) >= 0).all()
+    oracle = single_gate_stream(batches, 2, cap=96)
+    assert collect_tuples(outs) == collect_tuples(oracle)
+
+
+# ------------------------------------------------------------ soak @slow --
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8))
+def test_chaos_soak_many_seeds(seed):
+    """Long randomized soak: more ticks, more commands, per-seed random
+    leaf counts — the elastic path must never drift from the oracle."""
+    rng = np.random.default_rng(seed)
+    n_ticks = 16
+    n_leaves = int(rng.integers(1, 4))
+    batches = agg_stream(n_ticks=n_ticks, seed=seed)
+    tier = IngestTier(batches, N_SRC, n_leaves, **tier_kw())
+    issued = chaos_commands(tier, rng, n_ticks, n_leaves, max_cmds=6)
+    outs = list(tier)
+    assert_chaos_invariants(tier, outs, issued, batches)
+
+
+@pytest.mark.slow
+def test_chaos_soak_process_workers():
+    """One soak pass over the spawned-process transport: churn parity must
+    not depend on the channel implementation."""
+    batches = agg_stream(n_ticks=10, seed=11)
+    tier = IngestTier(batches, N_SRC, 2, **tier_kw(worker="process"))
+    issued = chaos_commands(tier, np.random.default_rng(11),
+                            n_ticks=10, n_leaves=2)
+    outs = list(tier)
+    assert_chaos_invariants(tier, outs, issued, batches)
