@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import re
 import time
 
 import numpy as np
@@ -50,6 +52,198 @@ def write_csv(path: str):
             w.writerow([name, f"{us:.1f}", derived]
                        + [("" if v is None else f"{v:.3f}")
                           for v in (p50, p99, d2s)])
+
+
+TPUT_RE = re.compile(r"([0-9][0-9.e+]*)\s*t/s")
+
+
+def write_bench_json(path: str, query: str, rows, config: dict):
+    """Perf-trajectory artifact (``BENCH_q<id>.json``): the run config plus
+    this query's result rows.  ``tput_tps`` is parsed from the first
+    ``<N> t/s`` figure in the derived column when present, else derived
+    from us_per_call; rows without either leave it null."""
+    out_rows = []
+    for name, us, derived, p50, p99, d2s in rows:
+        m = TPUT_RE.search(derived or "")
+        tput = (float(m.group(1)) if m
+                else (1e6 / us if us else None))
+        out_rows.append(dict(name=name, us_per_call=us, tput_tps=tput,
+                             p50_ms=p50, p99_ms=p99, detect_switch_ms=d2s,
+                             derived=derived))
+    with open(path, "w") as f:
+        json.dump(dict(query=query, config=config, rows=out_rows), f,
+                  indent=2)
+        f.write("\n")
+
+
+def run_device_resident_bench(make_stream, n_sources: int, n_leaves: int,
+                              make_pipe, *, tick: int, super_batch: int = 8,
+                              queue_cap: int = 4, oracle_cap: int = None,
+                              reps: int = 3):
+    """Device-resident hot path vs the per-tick host-merge baseline on the
+    identical multihost stream (q1/q3 shared harness).
+
+    * baseline — ``RootMerge`` on host (one watermark sync per merge
+      round) feeding one compiled step dispatch per tick;
+    * device   — fused stacked-leaf root merge (``RootMerge(device=True)``)
+      feeding the persistent compiled K-tick scan (``super_batch=K``).
+
+    The gated comparison isolates the *hot path* the PR changes: the leaf
+    rounds are prerecorded once (leaf ingest is byte-identical in both
+    variants and, on a single-core CPU host, dominates end-to-end time),
+    then each variant's merge→step loop runs once from fresh state for the
+    parity outputs and ``reps`` more times on the warm executables for the
+    best-of timing.  An end-to-end async pass (full ``IngestTier`` +
+    ``AsyncStreamRuntime``) runs last as the informational whole-system
+    rows.  Single-core CPU caveat: XLA "device" compute shares the one
+    core with ingest, so the tick math itself is not accelerated — the
+    hot-path speedup here measures what the fused merge + persistent scan
+    remove (per-tick dispatch, watermark syncs, staging); on a real
+    accelerator the same code path also overlaps host/device work.
+
+    Returns ``(res, parity)``: ``res["hot"]`` (host_tps/dev_tps/speedup/
+    fill), ``res["host"|"device"]["report"]`` (end-to-end), and the
+    exact-output gates (device-merged stream vs single-ScaleGate oracle,
+    host-variant vs device-variant output multisets, device-variant vs a
+    synchronous replay of its own merged stream)."""
+    from repro.core import tuples as T
+    from repro.core.async_runtime import AsyncStreamRuntime
+    from repro.ingest import IngestTier, collect_tuples, single_gate_stream
+    from repro.ingest import leaf as L
+    from repro.ingest.root import RootMerge, bucket
+    from repro.ingest.tier import SourcePartitioner
+    from repro.io import NullSink
+    from repro.io.sinks import flatten_outputs
+
+    batches = list(make_stream())
+    kmax, pw = batches[0].kmax, batches[0].payload_width
+    part = SourcePartitioner(n_sources, range(n_leaves))
+
+    # prerecord the leaf rounds (identical input to both merge variants)
+    gates = {l: L.LeafGate(l, n_sources, part.owned_mask(l), tick, kmax, pw)
+             for l in part.leaves}
+    rounds = []
+    for r, b in enumerate(batches):
+        b_np = L.batch_to_np(b)
+        keep = b_np["valid"]
+        leaf_of = part.assignment[np.clip(b_np["source"], 0, n_sources - 1)]
+        rounds.append([gates[l].push_round(
+            r, {f: b_np[f][keep & (leaf_of == l)] for f in L.FIELDS})
+            for l in part.leaves])
+    fin = []
+    for l in part.leaves:
+        gates[l].flush_all()
+        fin.append(gates[l].push_round(len(batches), None, final=True))
+    rounds.append(fin)
+    ntup = sum(int((np.asarray(b.valid) & ~np.asarray(b.is_control)).sum())
+               for b in batches)
+
+    # identical fixed-shape output contract for both variants: the device
+    # path reserves one chunk per leaf (cap + n_leaves*chunk lanes), so the
+    # host baseline buckets from the same floor — otherwise the comparison
+    # measures lane-count padding (every lane costs real compute per tick
+    # downstream), not the merge/dispatch/sync overhead the PR removes
+    chunk = bucket(tick)
+
+    def make_root(device):
+        return RootMerge(max(2 * n_leaves, n_leaves + 4), 2 * tick, kmax,
+                         pw, part.leaves,
+                         out_pad=(tick if device else n_leaves * chunk),
+                         device=device, check_every=8)
+
+    def drive_host(pipe, root, collect=None):
+        for outs in rounds:
+            rb = root.push(outs)
+            o1, o2, sw, il = pipe.step_staged(rb)
+            bool(sw), np.asarray(il)      # control-lane syncs, as in live
+            if collect is not None:
+                collect.append((rb, o1, o2))
+
+    fill = [0, 0]                         # dispatches, ticks dispatched
+
+    def drive_device(pipe, root, collect=None):
+        group, key = [], [None]
+
+        def flush():
+            if not group:
+                return
+            b0 = group[0]
+            pad = [T.empty_batch(b0.batch, b0.kmax, b0.payload_width)
+                   ] * (super_batch - len(group))
+            out = pipe.run_persistent_staged(pipe.stage_super(group + pad))
+            bool(out.switched.any()), np.asarray(out.inst_load.sum(axis=0))
+            fill[0] += 1
+            fill[1] += len(group)
+            if collect is not None:
+                collect.append((list(group), out))
+            del group[:]
+
+        for outs in rounds:
+            rb = root.push(outs)
+            k2 = (rb.batch, rb.kmax, rb.payload_width)
+            if group and k2 != key[0]:
+                flush()                   # shape change: flush the group
+            group.append(rb)
+            key[0] = k2
+            if len(group) == super_batch:
+                flush()
+        flush()
+
+    # fresh-state pass: compiles everything + yields the parity outputs
+    pipe_h, pipe_d = make_pipe(), make_pipe()
+    coll_h, coll_d = [], []
+    drive_host(pipe_h, make_root(False), coll_h)
+    drive_device(pipe_d, make_root(True), coll_d)
+    host_outs = sorted(sum((flatten_outputs(o1) + flatten_outputs(o2)
+                            for _, o1, o2 in coll_h), []))
+    dev_outs = sorted(sum(
+        (flatten_outputs(o.outs_pre) + flatten_outputs(o.outs_post)
+         for _, o in coll_d), []))
+    dev_emitted = [rb for grp, _ in coll_d for rb in grp]
+
+    pipe_s = make_pipe()                  # sequential replay oracle
+    sync_outs = []
+    for rb in dev_emitted:
+        o1, o2, _ = pipe_s.step(rb)
+        sync_outs += flatten_outputs(o1) + flatten_outputs(o2)
+    oracle = single_gate_stream(list(make_stream()), n_sources,
+                                cap=oracle_cap or 3 * tick)
+    parity = dict(
+        tier=collect_tuples(dev_emitted) == collect_tuples(oracle),
+        pipeline=host_outs == dev_outs,
+        sync=sorted(sync_outs) == dev_outs,
+    )
+
+    # timed reps on the warm executables (fresh roots, best-of timing —
+    # single-core scheduler noise makes mean/median unstable)
+    fill[0] = fill[1] = 0
+    hs, ds = [], []
+    for _ in range(reps):
+        root = make_root(False)
+        t0 = time.perf_counter()
+        drive_host(pipe_h, root)
+        hs.append(ntup / (time.perf_counter() - t0))
+        root = make_root(True)
+        t0 = time.perf_counter()
+        drive_device(pipe_d, root)
+        ds.append(ntup / (time.perf_counter() - t0))
+    res = {"hot": dict(host_tps=max(hs), dev_tps=max(ds),
+                       speedup=max(ds) / max(max(hs), 1e-9),
+                       fill=fill[1] / max(fill[0], 1), reps=reps,
+                       ntup=ntup)}
+
+    # end-to-end async pass (informational): full tier + async runtime
+    for name, device, sb, pipe in (("host", False, 1, pipe_h),
+                                   ("device", True, super_batch, pipe_d)):
+        tier = IngestTier(make_stream(), n_sources, n_leaves,
+                          worker="thread", leaf_cap=tick,
+                          root_cap=2 * tick,
+                          out_pad=(tick if device else n_leaves * chunk),
+                          root_device=device)
+        rt = AsyncStreamRuntime(pipe, tier, sink=NullSink(),
+                                queue_cap=queue_cap, super_batch=sb)
+        res[name] = dict(report=rt.run())
+    return res, parity
 
 
 def run_ingest_bench(batches, n_sources: int, n_leaves: int, *, tick: int,

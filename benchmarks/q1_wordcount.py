@@ -177,6 +177,75 @@ def run_async(wc_mode: str, pair_dist: int, n_ticks: int = 32):
     return rep_a, rep_s, ok
 
 
+def run_device_resident(n_hosts: int, n_ticks: int = 96, tick: int = 16,
+                        super_batch: int = 8):
+    """Device-resident hot path (fused device root merge + persistent
+    K-tick compiled scan) vs the per-tick host-merge baseline over the
+    N-host ingest rounds on the identical stream, parity-gated (tier vs
+    single-gate oracle, host vs device output multisets, device vs
+    synchronous replay).  Reduced shape (k_virt/out_cap/n_inst), same
+    convention as q3's async variant: small ticks keep the per-tick
+    dispatch+sync overhead the PR removes visible against the tick math,
+    which on this CPU-only host runs on the same single core."""
+    from benchmarks.common import run_device_resident_bench
+
+    kv, n_inst, out_cap = 64, 4, 64
+    n_sources = 2 * n_hosts
+    op = count_aggregate(WS, k_virt=kv, out_cap=out_cap, extra_slots=2,
+                         n_inputs=n_sources)
+
+    def make_stream():
+        rng = np.random.default_rng(7)
+        return datagen.tweets(rng, n_ticks=n_ticks, tick=tick,
+                              words_per_tweet=6, vocab=5000, k_virt=kv,
+                              rate_per_tick=50, n_sources=n_sources)
+
+    def make_pipe():
+        return VSNPipeline(op, n_max=n_inst, n_active=n_inst,
+                           stash_cap=4 * tick, tick_fn=fast_tick,
+                           merge_fn=merge_fast_state,
+                           init_sigma=lambda: fast_init(op.resolved()))
+
+    return run_device_resident_bench(make_stream, n_sources, n_hosts,
+                                     make_pipe, tick=tick,
+                                     super_batch=super_batch)
+
+
+def emit_device_resident(qname: str, res, parity):
+    """Shared q1/q3 rows for the device-resident-vs-host-merge comparison:
+    hot-path baseline + device rows, the parity+speedup gate row (any
+    parity False, or a hot-path speedup below the 0.8 noise floor, is a
+    FAIL row), and an informational end-to-end async row.  The >=1.5x
+    target assumes an accelerator device; on a single-core CPU host the
+    tick math shares the core with ingest, so the hot-path row measures
+    the removed dispatch/sync/staging overhead only."""
+    hot = res["hot"]
+    speed = hot["speedup"]
+    emit(f"{qname}_hotpath_hostmerge_tput_tps",
+         1e6 / max(hot["host_tps"], 1e-9),
+         f"{hot['host_tps']:.0f} t/s per-tick host-merge hot path "
+         f"(best of {hot['reps']})")
+    emit(f"{qname}_hotpath_device_resident_tput_tps",
+         1e6 / max(hot["dev_tps"], 1e-9),
+         f"{hot['dev_tps']:.0f} t/s fused root + persistent scan "
+         f"(K fill {hot['fill']:.1f})")
+    emit(f"{qname}_device_resident_speedup",
+         1e6 / max(hot["dev_tps"], 1e-9),
+         f"device/host {speed:.2f}x hot path "
+         "(target >=1.5x on accelerator; single-core CPU host)"
+         + ("" if speed >= 0.8 else " FAIL(speedup<0.8)")
+         + f", parity tier={parity['tier']}"
+           f" pipeline={parity['pipeline']} sync={parity['sync']}")
+    rep_h, rep_d = res["host"]["report"], res["device"]["report"]
+    e2e = rep_d.throughput_tps / max(rep_h.throughput_tps, 1e-9)
+    emit(f"{qname}_device_resident_e2e_tput_tps",
+         1e6 / max(rep_d.throughput_tps, 1e-9),
+         f"{rep_d.throughput_tps:.0f} t/s end-to-end async vs "
+         f"{rep_h.throughput_tps:.0f} t/s host-merge ({e2e:.2f}x; "
+         "leaf ingest shares the core, informational)",
+         p50_ms=rep_d.p50_ms, p99_ms=rep_d.p99_ms)
+
+
 def main(mesh: int = 0, async_: bool = False, ingest_hosts: int = 0):
     for wc_mode, dist, label in [("wordcount", 0, "wordcount"),
                                  ("paircount", 3, "pair_L"),
@@ -218,6 +287,9 @@ def main(mesh: int = 0, async_: bool = False, ingest_hosts: int = 0):
         if pipe_ok is not None:
             derived += f", pipeline_outputs_match={pipe_ok}"
         emit(label, 1e6 / max(tput[ingest_hosts], 1e-9), derived)
+    if async_ and ingest_hosts:
+        res, parity = run_device_resident(ingest_hosts)
+        emit_device_resident("q1_wordcount", res, parity)
 
 
 if __name__ == "__main__":

@@ -184,6 +184,42 @@ def run_async(n_ticks: int = 16):
     return rep_a, rep_s, ok
 
 
+def run_device_resident(n_hosts: int, n_ticks: int = 96,
+                        super_batch: int = 8):
+    """Device-resident hot path vs per-tick host-merge baseline on the
+    two-stream q3 workload through the join fast path (reduced shape,
+    small ticks — see q1.run_device_resident; the fast path stores one
+    tuple per key per tick, so the ready batch — stash 32 + the
+    device-merged round's cap+chunks lanes — must stay <= k)."""
+    from benchmarks.common import run_device_resident_bench
+    from repro.core.join import scalejoin_def
+    from repro.core.runtime import VSNPipeline
+    from repro.core.vsn import merge_fast_state
+
+    n_inst, k, ring, tick, out_cap = 4, 256, 4, 16, 64
+    n_sources = 2                # the q3 workload is two-stream by contract
+    n_leaves = min(n_hosts, n_sources)
+    op = scalejoin_def(WS, k, FJ, payload_width=4, ring=ring,
+                       out_cap=out_cap)
+
+    def join_tick(op_, st, ready, resp, explicit_w=None):
+        return join_fast(WS, FJ, st, ready, resp, out_cap=out_cap)
+
+    def make_stream():
+        rng = np.random.default_rng(3)
+        return datagen.scalejoin(rng, n_ticks=n_ticks, tick=tick, k_virt=1)
+
+    def make_pipe():
+        return VSNPipeline(op, n_max=n_inst, n_active=n_inst, stash_cap=32,
+                           tick_fn=join_tick, merge_fn=merge_fast_state,
+                           init_sigma=lambda: fast_join_init(k, ring, 4))
+
+    res, parity = run_device_resident_bench(make_stream, n_sources,
+                                            n_leaves, make_pipe, tick=tick,
+                                            super_batch=super_batch)
+    return res, parity
+
+
 def run_ingest(n_leaves: int, n_ticks: int = 12):
     """Multihost ingest over the two-stream q3 workload: one leaf gate per
     physical stream (L/R source ids double as ingest source ids), root-merge
@@ -228,6 +264,10 @@ def main(mesh: int = 0, async_: bool = False, ingest_hosts: int = 0):
              1e6 / max(tput[leaves_used], 1e-9),
              f"{leaves_used}-leaf/1-leaf root tput {scale:.2f}x, "
              f"outputs_match_oracle={ok}")
+    if async_ and ingest_hosts:
+        from benchmarks.q1_wordcount import emit_device_resident
+        res, parity = run_device_resident(ingest_hosts)
+        emit_device_resident("q3_scalejoin", res, parity)
     if mesh:
         if len(jax.devices()) < mesh:
             emit("q3_mesh_SKIP", 0.0,

@@ -50,6 +50,11 @@ def main(argv=None) -> None:
     ap.add_argument("--csv", default=None,
                     help="also write the result rows to this CSV file "
                          "(CI uploads it as a workflow artifact)")
+    ap.add_argument("--bench-dir", default=None,
+                    help="also write one BENCH_<module>.json "
+                         "perf-trajectory artifact per q-module into this "
+                         "directory (run config + that module's rows; "
+                         "q1_wordcount -> BENCH_q1.json)")
     args = ap.parse_args(argv)
 
     from repro.kernels import dispatch
@@ -71,6 +76,7 @@ def main(argv=None) -> None:
                      f"choose from {sorted(names)}")
         mods = tuple(m for m in mods if m.__name__.split(".")[-1] in keep)
     ok = True
+    row_span = {}                      # module name -> its slice of ROWS
     for mod in mods:
         params = inspect.signature(mod.main).parameters
         kw = {}
@@ -80,15 +86,31 @@ def main(argv=None) -> None:
             kw["async_"] = args.async_
         if "ingest_hosts" in params:
             kw["ingest_hosts"] = args.ingest_hosts
+        row0 = len(common.ROWS)
         try:
             mod.main(**kw)
         except Exception:
             ok = False
             common.emit(mod.__name__, 0.0, "FAIL (exception)")
             traceback.print_exc()
+        row_span[mod.__name__.split(".")[-1]] = (row0, len(common.ROWS))
     bad = common.failed_rows()
     if args.csv:
         common.write_csv(args.csv)
+    if args.bench_dir:
+        import jax
+        os.makedirs(args.bench_dir, exist_ok=True)
+        config = dict(backend=dispatch.default_backend(), mesh=args.mesh,
+                      async_=args.async_, ingest_hosts=args.ingest_hosts,
+                      n_devices=len(jax.devices()))
+        for name, (lo, hi) in row_span.items():
+            if hi == lo:
+                continue
+            # q1_wordcount -> BENCH_q1.json; kernels_bench -> BENCH_kernels_bench.json
+            short = name.split("_")[0] if name.startswith("q") else name
+            path = os.path.join(args.bench_dir, f"BENCH_{short}.json")
+            common.write_bench_json(path, name, common.ROWS[lo:hi], config)
+            print(f"# wrote {path}", flush=True)
     if bad:
         print(f"# {len(bad)} FAIL row(s):", file=sys.stderr)
         for name, _, derived in bad:

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Pinned-environment benchmark launcher: makes the BENCH_*.json artifacts
+# reproducible across hosts by fixing the knobs that silently skew timings.
+#
+#   ./run.sh --only q1_wordcount,q3_scalejoin --async --ingest-hosts 2 \
+#            --bench-dir bench-json
+#
+# Environment knobs (all optional):
+#   DEVICES=N    emulate N XLA host devices (sets
+#                --xla_force_host_platform_device_count; leave unset for
+#                the single real CPU device — smoke benches depend on it)
+#   PIN_CPUS=S   pin the run to a CPU set via taskset (e.g. "0" or "0-3");
+#                isolates the timed loops from sibling load
+#   LD_PRELOAD   honored if already set; otherwise tcmalloc is preloaded
+#                when present (allocator jitter is visible at the
+#                sub-millisecond tick times the hot-path rows measure)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [ -n "${DEVICES:-}" ]; then
+  export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=${DEVICES}"
+fi
+
+if [ -z "${LD_PRELOAD:-}" ]; then
+  for lib in /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+             /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+             /usr/lib/libtcmalloc_minimal.so.4; do
+    if [ -e "$lib" ]; then
+      export LD_PRELOAD="$lib"
+      break
+    fi
+  done
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
+
+CMD=(python -m benchmarks.run "$@")
+if [ -n "${PIN_CPUS:-}" ] && command -v taskset >/dev/null 2>&1; then
+  exec taskset -c "${PIN_CPUS}" "${CMD[@]}"
+fi
+exec "${CMD[@]}"

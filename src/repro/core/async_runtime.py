@@ -62,6 +62,17 @@ class StagedTick:
 
 
 @dataclasses.dataclass
+class StagedSuper:
+    """K consecutive same-shape ticks staged as one [K, B] super-batch for
+    the pipeline's persistent compiled driver (``run_persistent_staged``).
+    ``n_pad`` trailing ticks are all-invalid no-op fillers (a partial tail
+    or an early flush on a shape change keeps one compiled K shape)."""
+    metas: List[TickMeta]          # one per REAL tick, in order
+    stack: T.TupleBatch            # device-resident [K, B] stack
+    n_pad: int
+
+
+@dataclasses.dataclass
 class RunReport:
     ticks: int
     tuples: int
@@ -148,11 +159,22 @@ class AsyncStreamRuntime:
     ``step_staged`` (VSNPipeline and MeshPipeline do)."""
 
     def __init__(self, pipeline, source, sink=None, controller=None,
-                 queue_cap: int = 4, metrics: Optional[MetricsBus] = None):
+                 queue_cap: int = 4, metrics: Optional[MetricsBus] = None,
+                 super_batch: int = 1):
         self.pipeline = pipeline
         self.source = source
         self.sink = sink if sink is not None else CollectSink()
         self.controller = controller
+        # super_batch=K stages K consecutive same-shape ticks as ONE
+        # device-resident stack and dispatches the pipeline's persistent
+        # compiled K-tick scan instead of K step calls: one dispatch, one
+        # control-lane sync, zero host crossings for the data lane.  The
+        # controller still runs (once per super-batch); its reconfiguration
+        # is injected into the scan's first tick on device.
+        assert super_batch >= 1
+        if super_batch > 1:
+            assert hasattr(pipeline, "run_persistent_staged"), pipeline
+        self.super_batch = super_batch
         self.queue = BoundedQueue(queue_cap)
         self.metrics = metrics or MetricsBus(queue_cap=queue_cap)
         # a caller-supplied bus must still know the in-flight cap, or the
@@ -178,17 +200,71 @@ class AsyncStreamRuntime:
         with_hist = not getattr(self.pipeline, "device_inst_load", False)
         frontier = _initial_frontier(self.pipeline, n_inputs)
         try:
-            for tick_id, b in enumerate(self.source):
-                if max_ticks is not None and tick_id >= max_ticks:
-                    break
-                meta = tick_meta(b, tick_id, n_inputs, k_virt, frontier,
-                                 with_hist=with_hist)
-                staged = self.pipeline.stage(b)   # async transfer
-                self.queue.put(StagedTick(meta, staged))
+            if self.super_batch > 1:
+                self._ingest_super(max_ticks, n_inputs, k_virt, with_hist,
+                                   frontier)
+            else:
+                for tick_id, b in enumerate(self.source):
+                    if max_ticks is not None and tick_id >= max_ticks:
+                        break
+                    meta = tick_meta(b, tick_id, n_inputs, k_virt, frontier,
+                                     with_hist=with_hist)
+                    staged = self.pipeline.stage(b)   # async transfer
+                    self.queue.put(StagedTick(meta, staged))
         except BaseException as e:              # surfaced after join()
             self._ingest_error = e
         finally:
             self.queue.close()
+
+    def _ingest_super(self, max_ticks, n_inputs: int, k_virt: int,
+                      with_hist: bool, frontier: np.ndarray):
+        """Group up to ``super_batch`` consecutive same-shape ticks and
+        stage each group as one device stack.  A shape change flushes the
+        open group early; a partial group is padded with all-invalid no-op
+        ticks so every dispatch reuses ONE compiled K-tick executable."""
+        K = self.super_batch
+        group: List[T.TupleBatch] = []
+        metas: List[TickMeta] = []
+        gkey = None
+
+        def flush():
+            nonlocal group, metas
+            if not group:
+                return
+            n_pad = K - len(group)
+            b0 = group[0]
+            ticks = group + [T.empty_batch(b0.batch, b0.kmax,
+                                           b0.payload_width)] * n_pad
+            stack = self.pipeline.stage_super(ticks)    # async transfer
+            self.queue.put(StagedSuper(metas=metas, stack=stack,
+                                       n_pad=n_pad))
+            group, metas = [], []
+
+        for tick_id, b in enumerate(self.source):
+            if max_ticks is not None and tick_id >= max_ticks:
+                break
+            key = (b.batch, b.kmax, b.payload_width)
+            if group and key != gkey:
+                flush()
+            gkey = key
+            metas.append(tick_meta(b, tick_id, n_inputs, k_virt, frontier,
+                                   with_hist=with_hist))
+            group.append(b)
+            if len(group) == K:
+                flush()
+        flush()
+
+    @staticmethod
+    def _combine_meta(metas: List[TickMeta]) -> TickMeta:
+        """One decision-granularity view of a super-batch: tuple counts and
+        key histograms sum; the frontier stamp is the one BEFORE the first
+        tick (the reconfiguration is injected there)."""
+        hist = (None if metas[0].key_hist is None
+                else np.sum([m.key_hist for m in metas], axis=0))
+        return TickMeta(tick_id=metas[0].tick_id,
+                        n_tuples=sum(m.n_tuples for m in metas),
+                        frontier_before=metas[0].frontier_before,
+                        key_hist=hist)
 
     # -- metric sampling ----------------------------------------------------
     def _host_inst_load(self, key_hist) -> Optional[np.ndarray]:
@@ -254,22 +330,34 @@ class AsyncStreamRuntime:
                 except QueueClosed:     # ingest done and every tick drained
                     break
                 idle_s = time.perf_counter() - t_wait
-                rc = self._decide(item.meta)
+                if isinstance(item, StagedSuper):
+                    meta = self._combine_meta(item.metas)
+                else:
+                    meta = item.meta
+                rc = self._decide(meta)
                 t0 = time.perf_counter()
-                o1, o2, switched, inst_load = self.pipeline.step_staged(
-                    item.staged, reconfig=rc,
-                    frontier=item.meta.frontier_before)
+                if isinstance(item, StagedSuper):
+                    out = self.pipeline.run_persistent_staged(
+                        item.stack, reconfig=rc, reconfig_at=0,
+                        frontier=meta.frontier_before)
+                    o1, o2 = out.outs_pre, out.outs_post
+                    switched = out.switched.any()
+                    inst_load = (None if out.inst_load is None
+                                 else out.inst_load.sum(axis=0))
+                else:
+                    o1, o2, switched, inst_load = self.pipeline.step_staged(
+                        item.staged, reconfig=rc,
+                        frontier=meta.frontier_before)
                 if rc is not None:
-                    self.reconfig_trace.append((item.meta.tick_id, rc))
+                    self.reconfig_trace.append((meta.tick_id, rc))
                     self.metrics.record_detection(rc.epoch,
-                                                  item.meta.tick_id, rc)
-                self.sink.accept(item.meta.tick_id, o1, o2)
+                                                  meta.tick_id, rc)
+                self.sink.accept(meta.tick_id, o1, o2)
                 if pending is not None:
                     # tick T-1 syncs while T computes; the wait for T's
                     # arrival was source idle time, not T-1's latency
                     self._drain(pending, idle_s=idle_s)
-                pending = (item.meta.tick_id, switched, inst_load,
-                           item.meta, t0)
+                pending = (meta.tick_id, switched, inst_load, meta, t0)
             if pending is not None:
                 self._drain(pending)
         finally:

@@ -67,6 +67,48 @@ def ctrl_lanes(n_inputs: int, frontier, epoch_id: int, kmax: int,
     return functools.reduce(T.concat, lanes)
 
 
+def inject_ctrl(inc_stack: T.TupleBatch, ctrl: T.TupleBatch, rc_tick,
+                n_inputs: int) -> T.TupleBatch:
+    """Overwrite the ctrl pad region (the last ``n_inputs`` lanes) of tick
+    ``rc_tick`` in a staged [K, B] super-batch with ``ctrl``'s lanes.
+
+    ``rc_tick`` may be a traced scalar, so ONE compiled persistent
+    executable covers both the reconfig and the steady-state call: with no
+    reconfiguration the caller passes an all-invalid ``ctrl`` (and any
+    tick), making the update a proven no-op — the pad region is already
+    all-invalid by construction (``stage_super``)."""
+    def upd(stack_leaf, ctrl_leaf):
+        start = ((rc_tick, stack_leaf.shape[1] - n_inputs)
+                 + (0,) * (stack_leaf.ndim - 2))
+        return jax.lax.dynamic_update_slice(
+            stack_leaf, ctrl_leaf[None].astype(stack_leaf.dtype), start)
+    return jax.tree.map(upd, inc_stack, ctrl)
+
+
+@jax.jit
+def _pad_stack(pad: T.TupleBatch, *batches: T.TupleBatch) -> T.TupleBatch:
+    """Append the all-invalid ctrl pad to each of K same-shape ticks and
+    stack them into one [K, B] super-batch in ONE compiled call — staging
+    must stay far cheaper than a tick, and the host-side alternative
+    (K x n_fields separate concat/stack dispatches) is not."""
+    padded = [T.concat(b, pad) for b in batches]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+
+
+@dataclasses.dataclass
+class PersistentOut:
+    """Host-visible result of one persistent K-tick run.  The data lane
+    (``outs_pre``/``outs_post``) stays a device array stack of leading dim
+    K until the sink materializes it; the rest is the control lane:
+    per-tick switch flags, watermark reports and (VSN only) per-instance
+    loads."""
+    outs_pre: Any                  # [K, ...] per-tick pre-phase outputs
+    outs_post: Any                 # [K, ...] per-tick post-phase outputs
+    switched: jax.Array            # bool[K]  epoch switch per tick
+    wmark: jax.Array               # i32[K]   watermark report per tick
+    inst_load: Any = None          # i32[K, n_max] or None (mesh)
+
+
 @dataclasses.dataclass
 class VSNPipeline:
     op: OperatorDef
@@ -95,6 +137,13 @@ class VSNPipeline:
         self._merge = self.merge_fn or vsn.merge_states
         self._sg_ready = False
         self._step = jax.jit(self._step_impl)
+        # persistent K-tick driver: donate the ScaleGate and sigma buffers
+        # (args 0 and 2) so the scan updates them in place; epoch is NEVER
+        # donated — with no reconfiguration ``fmu_new`` aliases its tables.
+        self._persistent = jax.jit(self._persistent_impl,
+                                   donate_argnums=(0, 2))
+        self._persistent_structs = {}
+        self._empty_ctrl = {}          # (kmax, p) -> steady-state (ctrl, rc)
 
     def _ensure_gate(self, incoming: T.TupleBatch):
         if not self._sg_ready:
@@ -103,32 +152,45 @@ class VSNPipeline:
                 incoming.payload_width)
             self._sg_ready = True
 
-    def _step_impl(self, sg, epoch, sigma, incoming, fmu_new, active_new):
-        sg, ready = scalegate.push(sg, incoming)
-        epoch = elastic.prepare_reconfig(epoch, ready, fmu_new, active_new)
-        pre, post = elastic.split_epoch_masks(epoch, ready)
-
-        # per-instance load of this tick under the in-effect f_mu: one unit
-        # per (valid data lane, key-set entry) routed to its owner — the
-        # live signal the elasticity controllers consume (§8.4).
+    def _inst_load(self, ready: T.TupleBatch, epoch) -> jax.Array:
+        """Per-instance load of one tick under the in-effect f_mu: one unit
+        per (valid data lane, key-set entry) routed to its owner — the
+        live signal the elasticity controllers consume (§8.4)."""
         data = ready.valid & ~ready.is_control
         kmask = data[:, None] & (ready.keys != T.NO_KEY)
         owners = epoch.fmu[jnp.clip(ready.keys, 0, None)]
-        inst_load = jnp.zeros((self.n_max,), jnp.int32
-                              ).at[owners].add(kmask.astype(jnp.int32))
+        return jnp.zeros((self.n_max,), jnp.int32
+                         ).at[owners].add(kmask.astype(jnp.int32))
 
-        ready_pre = dataclasses.replace(ready, valid=pre | (ready.is_control & ready.valid))
-        sigma, outs1 = vsn.run_tick(self.op, sigma, ready_pre, epoch.fmu,
-                                    epoch.active, self._tick, self._merge)
+    def _tick_with_epoch(self, sigma, ready, epoch):
+        return vsn.run_tick(self.op, sigma, ready, epoch.fmu, epoch.active,
+                            self._tick, self._merge)
 
-        live = ready.valid & ~ready.is_control
-        w_end = jnp.max(jnp.where(live, ready.tau, 0))
-        epoch, switched = elastic.advance_epoch(epoch, w_end)
-
-        ready_post = dataclasses.replace(ready, valid=post)
-        sigma, outs2 = vsn.run_tick(self.op, sigma, ready_post, epoch.fmu,
-                                    epoch.active, self._tick, self._merge)
+    def _step_impl(self, sg, epoch, sigma, incoming, fmu_new, active_new):
+        (sg, epoch, sigma, outs1, outs2, switched, _wmk,
+         inst_load) = vsn.pipeline_tick(sg, epoch, sigma, incoming, fmu_new,
+                                        active_new, self._tick_with_epoch,
+                                        self._inst_load)
         return sg, epoch, sigma, outs1, outs2, switched, inst_load
+
+    def _persistent_impl(self, sg, epoch, sigma, inc_stack, ctrl, rc_tick,
+                         fmu_new, active_new):
+        """K ticks inside one ``lax.scan``: only the control lane (switch
+        flags, watermark reports, instance loads) and the stacked output
+        buffers leave the compiled program — no per-tick host round-trip,
+        no per-tick dispatch."""
+        inc_stack = inject_ctrl(inc_stack, ctrl, rc_tick, self.op.n_inputs)
+
+        def body(carry, incoming):
+            sg, epoch, sigma = carry
+            sg, epoch, sigma, o1, o2, sw, wmk, il = vsn.pipeline_tick(
+                sg, epoch, sigma, incoming, fmu_new, active_new,
+                self._tick_with_epoch, self._inst_load)
+            return (sg, epoch, sigma), (o1, o2, sw, wmk, il)
+
+        (sg, epoch, sigma), (o1, o2, sw, wmk, il) = jax.lax.scan(
+            body, (sg, epoch, sigma), inc_stack)
+        return sg, epoch, sigma, o1, o2, sw, wmk, il
 
     def stage(self, incoming: T.TupleBatch) -> T.TupleBatch:
         """Asynchronously place a tick on the device (async ingest: the
@@ -173,6 +235,101 @@ class VSNPipeline:
         """Push one tick; returns (outputs_pre, outputs_post, switched)."""
         outs1, outs2, switched, _ = self.step_staged(incoming, reconfig)
         return outs1, outs2, switched
+
+    # -- persistent K-tick driver ------------------------------------------
+    def _frontier_after(self, batches, frontier0=None):
+        """Per-source last forwarded tau once ``batches`` have been pushed
+        (the Alg. 5 stamp for a control tuple injected after them);
+        ``frontier0`` avoids the blocking ``sg.wmark`` readback."""
+        frontier = (np.asarray(frontier0).copy() if frontier0 is not None
+                    else np.asarray(self.sg.wmark.frontier).copy())
+        for b in batches:
+            fold_frontier(frontier, b, self.op.n_inputs)
+        return frontier
+
+    def stage_super(self, batches) -> T.TupleBatch:
+        """Stack K same-shape ticks — each with its all-invalid ctrl pad
+        region appended — into one [K, B] device-resident super-batch (one
+        transfer for the whole scan; ``inject_ctrl`` later rewrites the pad
+        of at most one tick)."""
+        batches = list(batches)
+        assert batches, "empty super-batch"
+        self._ensure_gate(batches[0])
+        kmax, p = batches[0].kmax, batches[0].payload_width
+        pad = T.empty_batch(self.op.n_inputs, kmax, p)
+        return _pad_stack(pad, *batches)
+
+    def run_persistent_staged(self, stack: T.TupleBatch,
+                              reconfig: Optional[Reconfiguration] = None,
+                              reconfig_at: int = 0,
+                              frontier=None) -> PersistentOut:
+        """The persistent scan over a pre-staged super-batch.  A reconfig's
+        control tuples are injected into the ctrl pad lanes of tick
+        ``reconfig_at`` *inside* the compiled program, so the mid-scan
+        f_mu switch happens with zero state transfer and zero restaging;
+        ``frontier`` must then be the per-source last-forwarded-tau AFTER
+        the ticks preceding ``reconfig_at`` (see ``run_persistent``)."""
+        kmax = stack.keys.shape[-1]
+        p = stack.payload.shape[-1]
+        if reconfig is not None:
+            if frontier is None:
+                frontier = np.asarray(self.sg.wmark.frontier)
+            ctrl = ctrl_lanes(self.op.n_inputs, frontier, reconfig.epoch,
+                              kmax, p)
+            rc = jnp.asarray(max(reconfig_at, 0), jnp.int32)
+            fmu_new = jnp.asarray(reconfig.fmu)
+            active_new = jnp.asarray(reconfig.active)
+        else:
+            # the steady-state (no-reconfig) operands are call-invariant;
+            # rebuilding them per dispatch would tax every super-batch
+            if (kmax, p) not in self._empty_ctrl:
+                self._empty_ctrl[(kmax, p)] = (
+                    T.empty_batch(self.op.n_inputs, kmax, p),
+                    jnp.zeros((), jnp.int32))
+            ctrl, rc = self._empty_ctrl[(kmax, p)]
+            fmu_new = self.epoch.fmu
+            active_new = self.epoch.active
+        args = (self.sg, self.epoch, self.sigma, stack, ctrl, rc, fmu_new,
+                active_new)
+        key = (stack.tau.shape[0], stack.tau.shape[1], kmax, p)
+        if key not in self._persistent_structs:
+            self._persistent_structs[key] = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args)
+        (self.sg, self.epoch, self.sigma, o1, o2, sw, wmk,
+         il) = self._persistent(*args)
+        return PersistentOut(outs_pre=o1, outs_post=o2, switched=sw,
+                             wmark=wmk, inst_load=il)
+
+    def run_persistent(self, batches,
+                       reconfig: Optional[Reconfiguration] = None,
+                       reconfig_at: int = 0,
+                       frontier0=None) -> PersistentOut:
+        """Run K ticks inside ONE compiled ``lax.scan`` with donated
+        ScaleGate and sigma buffers: steady-state data never crosses the
+        host boundary between ticks (``persistent_hlo`` + ``launch.mesh.
+        host_transfer_ops`` is the witness).  Tick-for-tick identical to K
+        sequential ``step`` calls, including a mid-scan reconfiguration."""
+        batches = list(batches)
+        assert batches, "empty super-batch"
+        self._ensure_gate(batches[0])
+        frontier = None
+        if reconfig is not None:
+            frontier = self._frontier_after(batches[:max(reconfig_at, 0)],
+                                            frontier0)
+        stack = self.stage_super(batches)
+        return self.run_persistent_staged(stack, reconfig=reconfig,
+                                          reconfig_at=reconfig_at,
+                                          frontier=frontier)
+
+    def persistent_hlo(self) -> str:
+        """Compiled HLO of every persistent executable built so far — feed
+        to ``launch.mesh.host_transfer_ops`` to prove the data lane stays
+        on device for the whole scan."""
+        texts = []
+        for structs in self._persistent_structs.values():
+            texts.append(self._persistent.lower(
+                *structs).compile().as_text())
+        return "\n".join(texts)
 
 
 @dataclasses.dataclass
@@ -331,10 +488,22 @@ class MeshPipeline:
         self._step_fn = vsn.shard_pipeline_step(self.op, self.mesh, self.axis,
                                                 make_local, sigma)
         self._jit = jax.jit(self._step_fn)   # one jit; it caches per shape
+        # persistent variant: ctrl injection fused into the compiled call,
+        # sigma (the only big buffer; arg 2) donated.  sg/epoch are small
+        # replicated tables and stay undonated (fmu_new may alias epoch).
+        self._persistent = jax.jit(self._persistent_fn, donate_argnums=(2,))
+        self._persistent_structs = {}
+        self.last_wmarks = None              # i32[T] of the latest run
         self._sg_ready = False
         # abstract (shape+sharding) args per step variant, for the lazy
         # collective_bytes lowering — never pins device buffers
         self._arg_structs = {}
+
+    def _persistent_fn(self, sg, epoch, sigma, inc_stack, ctrl, rc_tick,
+                       fmu_new, active_new):
+        inc_stack = inject_ctrl(inc_stack, ctrl, rc_tick, self.op.n_inputs)
+        return self._step_fn(sg, epoch, sigma, inc_stack, fmu_new,
+                             active_new)
 
     # -- plumbing ----------------------------------------------------------
     def _ensure_gate(self, incoming: T.TupleBatch):
@@ -428,8 +597,9 @@ class MeshPipeline:
                 sharding=sh if isinstance(sh, NamedSharding) else None)
 
         self._arg_structs[key] = jax.tree.map(struct, args)
-        (self.sg, self.epoch, self.sigma, outs1, outs2,
-         switched) = self._jit(*args)
+        (self.sg, self.epoch, self.sigma, outs1, outs2, switched,
+         wmk) = self._jit(*args)
+        self.last_wmarks = wmk
         return outs1, outs2, switched
 
     def step(self, incoming: T.TupleBatch,
@@ -438,6 +608,92 @@ class MeshPipeline:
         switched) with the T=1 axis kept on the outputs."""
         outs1, outs2, switched = self.run([incoming], reconfig=reconfig)
         return outs1, outs2, switched[0]
+
+    # -- persistent K-tick driver ------------------------------------------
+    def stage_super(self, batches) -> T.TupleBatch:
+        """Stack K ticks (each with its all-invalid ctrl pad region) and
+        replicate the [K, B] super-batch across the mesh in one transfer."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        batches = list(batches)
+        assert batches, "empty super-batch"
+        self._ensure_gate(batches[0])
+        kmax, p = batches[0].kmax, batches[0].payload_width
+        pad = T.empty_batch(self.op.n_inputs, kmax, p)
+        stack = _pad_stack(pad, *batches)
+        rep = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda a: jax.device_put(a, rep), stack)
+
+    def run_persistent_staged(self, stack: T.TupleBatch,
+                              reconfig: Optional[Reconfiguration] = None,
+                              reconfig_at: int = 0,
+                              frontier=None) -> PersistentOut:
+        """As ``VSNPipeline.run_persistent_staged``, on the mesh: the ctrl
+        injection, the K-tick scan and the sharded two-phase ticks are one
+        compiled call with donated sigma.  ``inst_load`` is None (the mesh
+        step keeps zero extra replicated outputs)."""
+        from jax.sharding import NamedSharding
+
+        kmax = stack.keys.shape[-1]
+        p = stack.payload.shape[-1]
+        if reconfig is not None:
+            if frontier is None:
+                frontier = np.asarray(self.sg.wmark.frontier)
+            ctrl = ctrl_lanes(self.op.n_inputs, frontier, reconfig.epoch,
+                              kmax, p)
+            rc = jnp.asarray(max(reconfig_at, 0), jnp.int32)
+            fmu_new = jnp.asarray(reconfig.fmu)
+            active_new = jnp.asarray(reconfig.active)
+        else:
+            ctrl = T.empty_batch(self.op.n_inputs, kmax, p)
+            rc = jnp.zeros((), jnp.int32)
+            fmu_new = self.epoch.fmu
+            active_new = self.epoch.active
+        args = (self.sg, self.epoch, self.sigma, stack, ctrl, rc, fmu_new,
+                active_new)
+
+        def struct(a):
+            sh = getattr(a, "sharding", None)
+            return jax.ShapeDtypeStruct(
+                a.shape, a.dtype,
+                sharding=sh if isinstance(sh, NamedSharding) else None)
+
+        key = (stack.tau.shape[0], stack.tau.shape[1], kmax, p)
+        self._persistent_structs[key] = jax.tree.map(struct, args)
+        (self.sg, self.epoch, self.sigma, o1, o2, sw,
+         wmk) = self._persistent(*args)
+        self.last_wmarks = wmk
+        return PersistentOut(outs_pre=o1, outs_post=o2, switched=sw,
+                             wmark=wmk, inst_load=None)
+
+    def run_persistent(self, batches,
+                       reconfig: Optional[Reconfiguration] = None,
+                       reconfig_at: int = 0,
+                       frontier0=None) -> PersistentOut:
+        """K ticks in one compiled, donated call on the mesh; tick-for-tick
+        identical to ``run`` (they share the scan body) but with the ctrl
+        injection on device and sigma updated in place."""
+        batches = list(batches)
+        assert batches, "empty super-batch"
+        self._ensure_gate(batches[0])
+        frontier = None
+        if reconfig is not None:
+            frontier = self._frontier_after(batches[:max(reconfig_at, 0)],
+                                            frontier0)
+        stack = self.stage_super(batches)
+        return self.run_persistent_staged(stack, reconfig=reconfig,
+                                          reconfig_at=reconfig_at,
+                                          frontier=frontier)
+
+    def persistent_hlo(self) -> str:
+        """Compiled HLO of every persistent executable built so far (for
+        ``launch.mesh.host_transfer_ops`` — the data lane must show zero
+        host transfers)."""
+        texts = []
+        for structs in self._persistent_structs.values():
+            texts.append(self._persistent.lower(
+                *structs).compile().as_text())
+        return "\n".join(texts)
 
     # -- accounting --------------------------------------------------------
     def collective_bytes(self):

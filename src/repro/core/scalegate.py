@@ -168,6 +168,59 @@ def push(state: ScaleGateState, incoming: T.TupleBatch, *,
     return new_state, out
 
 
+def push_stacked(state: ScaleGateState, stacked: T.TupleBatch,
+                 reports: jax.Array, rmask: jax.Array, *,
+                 backend: str = None) -> Tuple[ScaleGateState, T.TupleBatch]:
+    """Fused root merge: one kernel call over stacked per-leaf chunk rows.
+
+    ``stacked`` is a TupleBatch whose fields carry a leading ``[rows, C]``
+    layout (each row one padded ready chunk from a leaf, rows in leaf
+    order); ``reports``/``rmask`` are the per-leaf reported watermarks and
+    report mask of this round.  The frontier fold, the Definition-3
+    reduction and the merge all happen inside one traced program
+    (``wm.fold_reports`` + ``scalegate_merge_stacked``), so the steady
+    state round never syncs to host.  Requires ``capacity % C == 0`` so the
+    stash prepends as whole rows.
+
+    Emission order: ``(tau, arrival)`` with arrival = stash lanes first,
+    then leaf rows in order — a valid ScaleGate total order under either
+    TIE_BREAK contract (the ready *set* and tau grouping match ``push``
+    exactly; only the order among equal-tau tuples may differ from the flat
+    xla path's ``(tau, source, arrival)``).
+    """
+    from repro.kernels.scalegate_merge.ops import scalegate_merge_stacked_op
+
+    cap = state.capacity
+    rows, c = stacked.tau.shape
+    assert cap % c == 0, (cap, c)
+
+    wstate, eff, w = wm.fold_reports(state.wmark, reports, rmask)
+
+    incoming = jax.tree.map(
+        lambda a: a.reshape((rows * c,) + a.shape[2:]), stacked)
+    combined = T.concat(state.stash, incoming)
+    n = combined.batch
+    order2, _, _ = scalegate_merge_stacked_op(
+        combined.tau.reshape(n // c, c), combined.source.reshape(n // c, c),
+        combined.valid.reshape(n // c, c).astype(jnp.int32), eff,
+        backend=backend)
+    merged = T.take(combined, order2.reshape(-1))
+
+    ready = merged.valid & (merged.tau <= w)
+    out = dataclasses.replace(merged, valid=ready)
+
+    keep = merged.valid & ~ready
+    keep_order = jnp.argsort(~keep, stable=True)
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    lanes = jnp.arange(cap)
+    stash = T.take(merged, keep_order[:cap], fill_invalid=lanes >= n_keep)
+    dropped = jnp.maximum(n_keep - cap, 0)
+
+    new_state = ScaleGateState(
+        stash=stash, wmark=wstate, overflow=state.overflow + dropped)
+    return new_state, out
+
+
 def add_sources(state: ScaleGateState, mask: jax.Array, gamma) -> ScaleGateState:
     """ESG addSources — Lemma 3: start the new frontier at gamma."""
     return dataclasses.replace(state, wmark=wm.add_sources(state.wmark, mask, gamma))

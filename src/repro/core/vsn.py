@@ -107,6 +107,46 @@ def run_tick(op: OperatorDef, state, ready: T.TupleBatch,
     return merged, stacked_outs  # outputs stay per-instance (readers merge)
 
 
+def pipeline_tick(sg, epoch, sigma, incoming: T.TupleBatch,
+                  fmu_new: jax.Array, active_new: jax.Array,
+                  tick_with_epoch: Callable, on_ready: Callable = None):
+    """One full pipeline tick: ScaleGate push -> prepareReconfig -> two-phase
+    epoch-split tick (Alg. 4 L17) -> advanceEpoch — the single traced body
+    shared by ``VSNPipeline._step_impl``, the mesh scan (``shard_pipeline_
+    step``) and the persistent K-tick drivers (``runtime.run_persistent``),
+    so the per-step and batched paths can never drift apart.
+
+    ``tick_with_epoch(sigma, ready, epoch) -> (sigma, outs)`` runs one
+    phase under the epoch in effect for it; ``on_ready(ready, epoch)``
+    (optional) is evaluated right after prepareReconfig — under the
+    in-effect ``f_mu``, before any switch — and its result is returned as
+    ``extra`` (the per-instance-load hook).
+
+    Returns ``(sg, epoch, sigma, outs_pre, outs_post, switched, wmk,
+    extra)`` where ``wmk`` is this tick's watermark report — the one
+    device scalar the control lane carries back per tick.
+    """
+    from repro.core import elastic, scalegate
+
+    sg, ready = scalegate.push(sg, incoming)
+    epoch = elastic.prepare_reconfig(epoch, ready, fmu_new, active_new)
+    pre, post = elastic.split_epoch_masks(epoch, ready)
+    extra = None if on_ready is None else on_ready(ready, epoch)
+
+    ready_pre = dataclasses.replace(
+        ready, valid=pre | (ready.is_control & ready.valid))
+    sigma, outs1 = tick_with_epoch(sigma, ready_pre, epoch)
+
+    live = ready.valid & ~ready.is_control
+    w_end = jnp.max(jnp.where(live, ready.tau, 0))
+    epoch, switched = elastic.advance_epoch(epoch, w_end)
+
+    ready_post = dataclasses.replace(ready, valid=post)
+    sigma, outs2 = tick_with_epoch(sigma, ready_post, epoch)
+    return (sg, epoch, sigma, outs1, outs2, switched, sg.wmark.value(),
+            extra)
+
+
 def flatten_outputs(stacked: Outputs) -> Outputs:
     """Merge per-instance output buffers into one (downstream TB ingest).
 
@@ -316,12 +356,15 @@ def shard_pipeline_step(op: OperatorDef, mesh, axis: str,
     holds without any communication.  Returns
 
         step(sg, epoch, sigma, inc_stack, fmu_new, active_new)
-          -> (sg, epoch, sigma, outs_pre, outs_post, switched[T])
+          -> (sg, epoch, sigma, outs_pre, outs_post, switched[T], wmark[T])
+
+    ``wmark[T]`` is the per-tick watermark report — part of the control
+    lane the persistent driver reads back (the data lane never leaves the
+    device between ticks).
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
-    from repro.core import elastic, scalegate
 
     n_shards = mesh.shape[axis]
     assert op.k_virt % n_shards == 0, (op.k_virt, n_shards)
@@ -334,33 +377,21 @@ def shard_pipeline_step(op: OperatorDef, mesh, axis: str,
 
         def scan_body(carry, incoming):
             sg, epoch, sigma = carry
-            sg, ready = scalegate.push(sg, incoming)
-            epoch = elastic.prepare_reconfig(epoch, ready, fmu_new,
-                                             active_new)
-            pre, post = elastic.split_epoch_masks(epoch, ready)
+            sg, epoch, sigma, outs1, outs2, switched, wmk, _ = pipeline_tick(
+                sg, epoch, sigma, incoming, fmu_new, active_new,
+                lambda s, r, e: tick_l(s, r))
+            return (sg, epoch, sigma), (outs1, outs2, switched, wmk)
 
-            ready_pre = dataclasses.replace(
-                ready, valid=pre | (ready.is_control & ready.valid))
-            sigma, outs1 = tick_l(sigma, ready_pre)
-
-            live = ready.valid & ~ready.is_control
-            w_end = jnp.max(jnp.where(live, ready.tau, 0))
-            epoch, switched = elastic.advance_epoch(epoch, w_end)
-
-            ready_post = dataclasses.replace(ready, valid=post)
-            sigma, outs2 = tick_l(sigma, ready_post)
-            return (sg, epoch, sigma), (outs1, outs2, switched)
-
-        (sg, epoch, sigma), (o1, o2, sw) = jax.lax.scan(
+        (sg, epoch, sigma), (o1, o2, sw, wmk) = jax.lax.scan(
             scan_body, (sg, epoch, sigma), inc_stack)
-        return sg, epoch, sigma, _lift_outs(o1), _lift_outs(o2), sw
+        return sg, epoch, sigma, _lift_outs(o1), _lift_outs(o2), sw, wmk
 
     def step(sg, epoch, sigma, inc_stack, fmu_new, active_new):
         return shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(), spec_sigma, P(), P(), P()),
             out_specs=(P(), P(), spec_sigma, _outs_spec(axis),
-                       _outs_spec(axis), P()),
+                       _outs_spec(axis), P(), P()),
             check_vma=False,
         )(sg, epoch, sigma, inc_stack, fmu_new, active_new)
 

@@ -82,6 +82,23 @@ def observe_explicit(state: WatermarkState, values: jax.Array,
     return dataclasses.replace(state, frontier=frontier)
 
 
+def fold_reports(state: WatermarkState, reports: jax.Array,
+                 mask: jax.Array):
+    """Device-side frontier reduction for the fused root merge.
+
+    Folds the leaves' reported watermarks into the frontier
+    (``observe_explicit``) and reduces to the gate value in the same traced
+    program: returns ``(state', eff, W)`` where ``eff`` is the per-leaf
+    effective frontier (INF on inactive leaves — the stacked kernel's
+    report tile) and ``W = min(eff)`` is Definition 3 one level up.  The
+    whole reduction stays on device, so the root merge never reads a
+    watermark back to host inside its per-round hot path.
+    """
+    st = observe_explicit(state, reports, mask)
+    eff = jnp.where(st.active, st.frontier, INF_TIME)
+    return st, eff, jnp.min(eff)
+
+
 def clamp_frontier(state: WatermarkState, mask: jax.Array,
                    gamma) -> WatermarkState:
     """Rebalance clamp (Lemma 3, applied one level up): when a merge point's

@@ -41,7 +41,8 @@ import numpy as np
 from repro.core import scalegate
 from repro.core import tuples as T
 from repro.core import watermark as wm
-from repro.ingest.leaf import LeafOut, concat_np, np_to_batch, pad_np
+from repro.ingest.leaf import (FIELDS, LeafOut, concat_np, empty_np,
+                               np_to_batch, pad_np)
 
 MIN_PAD = 32
 
@@ -64,10 +65,29 @@ def _jit_push_wstate(backend: Optional[str]):
     return jax.jit(push)
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_push_stacked(backend: Optional[str]):
+    import jax
+
+    def push(state, stacked, reports, rmask):
+        return scalegate.push_stacked(state, stacked, reports, rmask,
+                                      backend=backend)
+    return jax.jit(push)
+
+
 class RootMerge:
+    """``device=True`` selects the fused on-device round: per-leaf ready
+    chunks are stacked into one rank-2 buffer and merged by a single
+    ``scalegate_merge_stacked`` kernel call with the watermark gate
+    evaluated on device (``wm.fold_reports``), so the steady-state round
+    issues no blocking host readback.  The per-round invariant checks of
+    the host path then run every ``check_every`` rounds instead (each
+    check is a device sync); stats accrue lazily (``sync_stats``)."""
+
     def __init__(self, max_leaves: int, cap: int, kmax: int,
                  payload_width: int, active_leaves: Sequence[int],
-                 backend: Optional[str] = None, out_pad: int = MIN_PAD):
+                 backend: Optional[str] = None, out_pad: int = MIN_PAD,
+                 device: bool = False, check_every: int = 8):
         import jax.numpy as jnp
         self.max_leaves = max_leaves
         self.kmax = kmax
@@ -77,17 +97,27 @@ class RootMerge:
         # round volume keeps the emitted batch shape constant, so the
         # downstream pipeline compiles one step instead of one per bucket
         self.out_pad = out_pad
+        self.device = device
+        self.check_every = check_every
+        if device:
+            # chunk rows of the stacked buffer; the stash prepends as whole
+            # rows, so the capacity must be row-aligned
+            self.chunk = bucket(out_pad)
+            cap = ((cap + self.chunk - 1) // self.chunk) * self.chunk
         active = np.zeros((max_leaves,), bool)
         active[list(active_leaves)] = True
         self.state = scalegate.init_scalegate(
             max_leaves, cap, kmax, payload_width, active=jnp.asarray(active))
         self._push = _jit_push_wstate(backend)
+        self._push_stacked = _jit_push_stacked(backend)
         # -- invariants + accounting -------------------------------------
         self.last_emitted_tau = -1       # total-order witness across rounds
         self.wmark = -1                  # monotone watermark witness
         self.leaf_overflow: Dict[int, int] = {l: 0 for l in active_leaves}
         self.tuples_out = 0
         self.rounds = 0
+        self._out_valid: List = []       # device count handles, unsynced
+        self._last_overflow_warned = 0
 
     @property
     def overflow(self) -> int:
@@ -129,12 +159,9 @@ class RootMerge:
                 self.remove_leaf(op[1])
 
     # -- the merge -----------------------------------------------------------
-    def push(self, outs: Sequence[LeafOut]) -> T.TupleBatch:
-        """Merge one round of leaf outputs; returns the root-ready batch
-        (static ``cap + bucket`` lanes, validity-masked, totally ordered).
-        """
-        import jax.numpy as jnp
-
+    def _fold_leaf_reports(self, outs: Sequence[LeafOut]):
+        """Per-leaf reported watermarks + report mask of this round, with
+        the leaf-overflow surfacing shared by both merge paths."""
         reports = np.full((self.max_leaves,), -1, np.int64)
         rmask = np.zeros((self.max_leaves,), bool)
         for o in outs:
@@ -147,7 +174,20 @@ class RootMerge:
                     f"{o.overflow} tuples dropped (was {prev})",
                     RuntimeWarning, stacklevel=2)
             self.leaf_overflow[o.leaf_id] = max(prev, o.overflow)
+        return reports, rmask
 
+    def push(self, outs: Sequence[LeafOut]) -> T.TupleBatch:
+        """Merge one round of leaf outputs; returns the root-ready batch
+        (static lane count, validity-masked, totally ordered).
+        """
+        if self.device:
+            return self._push_device(outs)
+        return self._push_host(outs)
+
+    def _push_host(self, outs: Sequence[LeafOut]) -> T.TupleBatch:
+        import jax.numpy as jnp
+
+        reports, rmask = self._fold_leaf_reports(outs)
         incoming_np = concat_np([o.ready for o in outs],
                                 self.kmax, self.payload_width)
         n = incoming_np["tau"].shape[0]
@@ -184,3 +224,80 @@ class RootMerge:
                 stacklevel=2)
         self.rounds += 1
         return out
+
+    def _push_device(self, outs: Sequence[LeafOut]) -> T.TupleBatch:
+        """The fused round: stack per-leaf ready chunks into rank-2 rows and
+        issue ONE ``push_stacked`` (merge + device-side watermark gate) —
+        no blocking host sync in the steady state.  Arrival order inside
+        the stacked buffer preserves the leaves' relative lane order, so
+        the emitted (tau, arrival) stream groups exactly like the host
+        path's compacted concat."""
+        import jax.numpy as jnp
+
+        reports, rmask = self._fold_leaf_reports(outs)
+        chunk = self.chunk
+        rows = []
+        for o in outs:
+            n, off = o.n_ready, 0
+            while off < n:
+                part = {f: o.ready[f][off:off + chunk] for f in FIELDS}
+                rows.append(pad_np(part, chunk))
+                off += chunk
+        # power-of-two row count bounds the set of compiled shapes; the
+        # floor at the round's leaf count keeps the steady-state output
+        # shape CONSTANT (a leaf with nothing ready contributes no data
+        # rows, and a flip-flopping shape would force the downstream
+        # super-batcher to flush partial, padded K-tick groups)
+        n_rows = bucket(max(len(rows), len(outs), 1), lo=1)
+        if len(rows) < n_rows:
+            empty = pad_np(empty_np(self.kmax, self.payload_width), chunk)
+            rows += [empty] * (n_rows - len(rows))
+        stacked = T.TupleBatch(
+            **{f: jnp.asarray(np.stack([r[f] for r in rows]))
+               for f in FIELDS})
+        self.state, out = self._push_stacked(
+            self.state, stacked, jnp.asarray(reports, jnp.int32),
+            jnp.asarray(rmask))
+        self.rounds += 1
+        self._out_valid.append(out.num_valid())
+        if self.check_every and self.rounds % self.check_every == 0:
+            self._verify_round(out)
+        return out
+
+    def _verify_round(self, out: T.TupleBatch) -> None:
+        """The host-path invariant checks, run periodically on the device
+        path (each is a device sync).  ``last_emitted_tau`` then witnesses
+        order across *checked* rounds — still sound, since a correct
+        emitted stream is non-decreasing across every round between them."""
+        w = int(self.state.wmark.value())
+        if w < self.wmark:
+            raise AssertionError(
+                f"root watermark regressed: {self.wmark} -> {w}")
+        self.wmark = w
+        tau = np.asarray(out.tau)
+        valid = np.asarray(out.valid)
+        if valid.any():
+            emitted = tau[valid]
+            if int(emitted[0]) < self.last_emitted_tau:
+                raise AssertionError(
+                    "root ready stream not totally ordered: emitted "
+                    f"tau {int(emitted[0])} after {self.last_emitted_tau}")
+            if (np.diff(emitted) < 0).any():
+                raise AssertionError("root ready batch not tau-sorted")
+            self.last_emitted_tau = int(emitted[-1])
+        if self.overflow > self._last_overflow_warned:
+            warnings.warn(
+                f"ingest root stash overflow: {self.overflow} tuples "
+                f"dropped (was {self._last_overflow_warned})",
+                RuntimeWarning, stacklevel=2)
+        self._last_overflow_warned = self.overflow
+
+    def sync_stats(self) -> None:
+        """Materialize the device path's lazily-tracked stats (blocks on the
+        accumulated count handles; call outside the hot loop)."""
+        if self._out_valid:
+            self.tuples_out += int(np.sum([int(np.asarray(v))
+                                           for v in self._out_valid]))
+            self._out_valid.clear()
+        if self.device:
+            self.wmark = max(self.wmark, int(self.state.wmark.value()))

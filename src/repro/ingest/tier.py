@@ -129,7 +129,8 @@ class IngestTier:
                  root_cap: int = 256, chan_cap: int = 4,
                  max_leaves: Optional[int] = None,
                  backend: Optional[str] = None, record: bool = False,
-                 schedule=None, out_pad: int = MIN_PAD):
+                 schedule=None, out_pad: int = MIN_PAD,
+                 root_device: bool = False, root_check_every: int = 8):
         assert worker in ("thread", "process", "inline"), worker
         assert n_leaves >= 1
         self.stream = stream
@@ -143,6 +144,8 @@ class IngestTier:
         assert n_leaves <= self.max_leaves
         self.schedule = schedule
         self.out_pad = out_pad
+        self.root_device = root_device
+        self.root_check_every = root_check_every
         self.part = SourcePartitioner(n_sources, range(n_leaves))
         self.frontier = np.zeros((n_sources,), np.int64)
         self.emitted: Optional[List[T.TupleBatch]] = [] if record else None
@@ -193,6 +196,8 @@ class IngestTier:
 
     def stats(self) -> IngestStats:
         r = self.root
+        if r is not None:
+            r.sync_stats()
         return IngestStats(
             leaves=self.part.leaves,
             rounds=0 if r is None else r.rounds,
@@ -222,7 +227,9 @@ class IngestTier:
             self._ctx = mp.get_context("spawn")
         self.root = RootMerge(self.max_leaves, self.root_cap, self._kmax,
                               self._pw, self.part.leaves,
-                              backend=self.backend, out_pad=self.out_pad)
+                              backend=self.backend, out_pad=self.out_pad,
+                              device=self.root_device,
+                              check_every=self.root_check_every)
         if self.worker != "inline":
             self._rounds = BoundedQueue(max(2 * self.chan_cap, 4))
             cap = max(4, (self.chan_cap + 2) * self.max_leaves)

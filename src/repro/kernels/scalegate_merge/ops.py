@@ -6,13 +6,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from repro.kernels.scalegate_merge.ref import scalegate_merge_ref
-from repro.kernels.scalegate_merge.scalegate_merge import (LANES,
-                                                           pallas_specs,
-                                                           scalegate_merge)
+from repro.kernels.scalegate_merge.ref import (scalegate_merge_ref,
+                                               scalegate_merge_stacked_ref)
+from repro.kernels.scalegate_merge.scalegate_merge import (
+    LANES, pallas_specs, pallas_specs_stacked, scalegate_merge,
+    scalegate_merge_stacked)
 
 dispatch.register_kernel("scalegate_merge",
                          pallas=scalegate_merge, xla=scalegate_merge_ref)
+
+dispatch.register_kernel("scalegate_merge_stacked",
+                         pallas=scalegate_merge_stacked,
+                         xla=scalegate_merge_stacked_ref)
 
 
 def _lowering_case():
@@ -29,6 +34,21 @@ def _lowering_case():
 dispatch.register_lint("scalegate_merge", _lowering_case)
 
 
+def _stacked_lowering_case():
+    from repro.kernels import lowering
+    r, c = 4, 64                        # representative stacked leaf rows
+    return lowering.KernelCase(
+        "scalegate_merge_stacked",
+        fn=scalegate_merge_stacked,
+        args=(jnp.zeros((r, c), jnp.int32), jnp.zeros((r, c), jnp.int32),
+              jnp.ones((r, c), jnp.int32),
+              jnp.zeros((8,), jnp.int32)),
+        specs=pallas_specs_stacked((r * c) // LANES))
+
+
+dispatch.register_lint("scalegate_merge_stacked", _stacked_lowering_case)
+
+
 @functools.partial(jax.jit, static_argnames=("n_sources", "backend"))
 def _impl(tau, src, valid, *, n_sources, backend):
     fn = dispatch.lookup("scalegate_merge", backend)
@@ -39,6 +59,19 @@ def scalegate_merge_op(tau, src, valid, *, n_sources, backend=None):
     """-> (order i32[N], ready i32[N], watermark i32[1])."""
     return _impl(tau, src, valid, n_sources=n_sources,
                  backend=dispatch.resolve(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _stacked_impl(tau2, src2, valid2, reports, *, backend):
+    fn = dispatch.lookup("scalegate_merge_stacked", backend)
+    return fn(tau2, src2, valid2, reports)
+
+
+def scalegate_merge_stacked_op(tau2, src2, valid2, reports, *, backend=None):
+    """-> (order i32[R, C] flat indices, ready i32[R, C], watermark i32[1]);
+    ``reports`` are the pre-masked per-leaf effective frontiers."""
+    return _stacked_impl(tau2, src2, valid2, reports,
+                         backend=dispatch.resolve(backend))
 
 
 scalegate_merge_ref_op = jax.jit(

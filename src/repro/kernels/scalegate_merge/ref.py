@@ -15,3 +15,19 @@ def scalegate_merge_ref(tau, src, valid, *, n_sources: int):
     order = jnp.argsort(sort_tau, stable=True).astype(jnp.int32)
     ready = (valid[order] & (tau[order] <= w)).astype(jnp.int32)
     return order, ready, w[None]
+
+
+def scalegate_merge_stacked_ref(tau2, src2, valid2, reports):
+    """Oracle for the stacked-leaf fused root merge: same (tau, arrival)
+    contract as the flat kernel (arrival = row-major flat index), with the
+    watermark taken from the pre-masked per-leaf reported frontiers instead
+    of the per-source fold."""
+    del src2
+    r, c = tau2.shape
+    tau = tau2.reshape(-1)
+    valid = (valid2 != 0).reshape(-1)
+    w = jnp.min(reports.astype(jnp.int32))
+    sort_tau = jnp.where(valid, tau, INF_TIME)
+    order = jnp.argsort(sort_tau, stable=True).astype(jnp.int32)
+    ready = (valid[order] & (tau[order] <= w)).astype(jnp.int32)
+    return order.reshape(r, c), ready.reshape(r, c), w[None]

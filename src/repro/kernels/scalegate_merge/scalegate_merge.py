@@ -80,25 +80,16 @@ def _cmp_exchange(key, idx, val, stride, asc):
             jnp.where(take, pv, val))
 
 
-def _kernel(n_sources, tau_ref, src_ref, valid_ref,
-            order_ref, ready_ref, wmark_ref):
-    tau = tau_ref[...]                    # [R, 128] i32
-    src = src_ref[...]                    # [R, 128] i32
-    valid = valid_ref[...]                # [R, 128] i32 (0/1)
+def _sort_ready(tau, valid, w):
+    """The shared bitonic body: sort (tau, arrival) over the [R, 128] tile
+    and gate readiness against the scalar watermark ``w`` without a gather
+    (the carried key equals tau on valid lanes by construction).  Returns
+    ``(order, ready)`` tiles; used by both the flat and the stacked-leaf
+    kernels so their traced networks can never drift apart."""
     r, c = tau.shape
     vb = valid != 0
     lane = (jax.lax.broadcasted_iota(jnp.int32, (r, c), 0) * c
             + jax.lax.broadcasted_iota(jnp.int32, (r, c), 1))
-
-    # Definition 3 watermark: min over sources of (max tau per source).
-    # n_sources is static and small — an unrolled scalar min-of-max chain
-    # instead of a rank-1 per-source vector.
-    w = None
-    for s_id in range(n_sources):
-        s_max = jnp.max(jnp.where((src == s_id) & vb, tau, -1))
-        w = s_max if w is None else jnp.minimum(w, s_max)
-    wmark_ref[0, 0] = w
-
     key = jnp.where(vb, tau, INF_TIME)
     idx = lane
     val = valid
@@ -110,11 +101,40 @@ def _kernel(n_sources, tau_ref, src_ref, valid_ref,
         asc = (lane & (1 << (stage + 1))) == 0
         for sub in range(stage, -1, -1):
             key, idx, val = _cmp_exchange(key, idx, val, 1 << sub, asc)
+    ready = jnp.where((val != 0) & (key <= w), 1, 0).astype(jnp.int32)
+    return idx, ready
 
-    order_ref[...] = idx
-    # readiness without a gather: key == tau on valid lanes by construction.
-    ready_ref[...] = jnp.where((val != 0) & (key <= w), 1, 0
-                               ).astype(jnp.int32)
+
+def _kernel(n_sources, tau_ref, src_ref, valid_ref,
+            order_ref, ready_ref, wmark_ref):
+    tau = tau_ref[...]                    # [R, 128] i32
+    src = src_ref[...]                    # [R, 128] i32
+    valid = valid_ref[...]                # [R, 128] i32 (0/1)
+    vb = valid != 0
+
+    # Definition 3 watermark: min over sources of (max tau per source).
+    # n_sources is static and small — an unrolled scalar min-of-max chain
+    # instead of a rank-1 per-source vector.
+    w = None
+    for s_id in range(n_sources):
+        s_max = jnp.max(jnp.where((src == s_id) & vb, tau, -1))
+        w = s_max if w is None else jnp.minimum(w, s_max)
+    wmark_ref[0, 0] = w
+
+    order_ref[...], ready_ref[...] = _sort_ready(tau, valid, w)
+
+
+def _stacked_kernel(tau_ref, valid_ref, rep_ref,
+                    order_ref, ready_ref, wmark_ref):
+    """Stacked-leaf fused root merge: the watermark is not derived from the
+    tuples but from the leaves' *reported* frontiers (explicit-watermark
+    mode, paper §6) — ``rep_ref`` is a (1, 128) tile of per-leaf effective
+    frontiers, INF on inactive/absent lanes, so ``W = min(rep)`` is the
+    Definition-3 composition ``W_root = min_leaf W_leaf``."""
+    w = jnp.min(rep_ref[...])
+    wmark_ref[0, 0] = w
+    order_ref[...], ready_ref[...] = _sort_ready(tau_ref[...],
+                                                 valid_ref[...], w)
 
 
 def pallas_specs(n_rows: int):
@@ -162,4 +182,64 @@ def scalegate_merge(tau, src, valid, *, n_sources: int,
     )(tau.reshape(rows, LANES), src.reshape(rows, LANES),
       valid.reshape(rows, LANES))
     return (order2.reshape(n_pad)[:n], ready2.reshape(n_pad)[:n],
+            w2.reshape(1))
+
+
+def pallas_specs_stacked(n_rows: int):
+    """Grid/Block/out structure of the stacked-leaf entry — shared with its
+    lowering-lint case.  Three rank-2 inputs: the (rows, 128) tau and valid
+    tiles plus the (1, 128) reported-frontier tile."""
+    tile = (n_rows, LANES)
+    return dict(
+        grid=(1,),
+        in_specs=[pl.BlockSpec(tile, lambda i: (0, 0)),
+                  pl.BlockSpec(tile, lambda i: (0, 0)),
+                  pl.BlockSpec((1, LANES), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec(tile, lambda i: (0, 0)),
+                   pl.BlockSpec(tile, lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(tile, jnp.int32),
+                   jax.ShapeDtypeStruct(tile, jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+    )
+
+
+def scalegate_merge_stacked(tau2, src2, valid2, reports, *,
+                            interpret: bool = False):
+    """Fused root merge over stacked per-leaf chunk rows.
+
+    -> (order i32[R, C] flat row-major indices, ready i32[R, C],
+        watermark i32[1]); any rank-2 input, ``reports`` i32[L <= 128]
+    pre-masked per-leaf effective frontiers (INF for inactive leaves).
+
+    The [R, C] buffer is flattened row-major (arrival = flat index), padded
+    to a power-of-two (rows, 128) tile like the flat kernel, and sorted by
+    the same (tau, arrival) bitonic network; the watermark gate is the min
+    over the reported frontiers instead of the per-source fold, so a single
+    kernel call replaces the root's whole per-round merge.  ``src2`` rides
+    along for signature parity with the xla oracle; the (tau, arrival)
+    contract does not consult it (see core.scalegate.TIE_BREAK).
+    """
+    del src2
+    r_in, c_in = tau2.shape
+    n = r_in * c_in
+    tau = tau2.reshape(n)
+    valid = valid2.astype(jnp.int32).reshape(n)
+    n_pad = max(LANES, 1 << (n - 1).bit_length()) if n > 1 else LANES
+    if n_pad != n:
+        tau = jnp.pad(tau, (0, n_pad - n))
+        valid = jnp.pad(valid, (0, n_pad - n))
+    n_leaves = reports.shape[0]
+    assert n_leaves <= LANES, f"{n_leaves} leaves exceed one report tile"
+    rep = jnp.pad(reports.astype(jnp.int32), (0, LANES - n_leaves),
+                  constant_values=INF_TIME).reshape(1, LANES)
+    rows = n_pad // LANES
+
+    order2, ready2, w2 = pl.pallas_call(
+        _stacked_kernel,
+        **pallas_specs_stacked(rows),
+        interpret=interpret,
+    )(tau.reshape(rows, LANES), valid.reshape(rows, LANES), rep)
+    return (order2.reshape(n_pad)[:n].reshape(r_in, c_in),
+            ready2.reshape(n_pad)[:n].reshape(r_in, c_in),
             w2.reshape(1))

@@ -24,6 +24,13 @@ latency p50/p99, the reconfiguration trace, and detection→switch latency.
   ``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
 * ``--record F.npz`` / ``--replay F.npz`` save / replay the exact tick
   stream (event times intact) via ``io.sources``;
+* ``--super-batch K``  stages K consecutive ticks as one device-resident
+  stack and dispatches the persistent compiled K-tick scan
+  (``run_persistent_staged``) — one dispatch and one control-lane sync
+  per K ticks instead of per tick;
+* ``--fused-root``     (with ``--ingest-hosts``) runs the root merge on
+  device: one fused stacked-leaf kernel call per round, no per-round
+  host sync (``RootMerge(device=True)``);
 * ``--ingest-hosts N``  spreads the workload over N physical sources and
   merges them through the hierarchical multi-host ScaleGate
   (``repro.ingest.IngestTier``, one leaf gate per ingest host) upstream of
@@ -129,6 +136,14 @@ def main(argv=None):
     ap.add_argument("--ingest-hosts", type=int, default=0,
                     help="merge the stream through a hierarchical "
                          "multi-host ScaleGate with N leaf gates")
+    ap.add_argument("--super-batch", type=int, default=1,
+                    help="stage K consecutive ticks as one device stack "
+                         "and run the persistent compiled K-tick scan "
+                         "(one dispatch + one control-lane sync per K)")
+    ap.add_argument("--fused-root", action="store_true",
+                    help="with --ingest-hosts: run the root merge on "
+                         "device (one fused stacked-leaf kernel per round, "
+                         "no per-round host sync)")
     args = ap.parse_args(argv)
 
     if args.mesh and len(jax.devices()) < args.mesh:
@@ -164,6 +179,7 @@ def main(argv=None):
                           worker="thread", leaf_cap=args.tick,
                           root_cap=2 * args.tick, record=True,
                           out_pad=2 * args.tick,
+                          root_device=args.fused_root,
                           schedule=getattr(src, "schedule", None))
         src = tier
     ctl = make_controller(args.controller, args.n_max)
@@ -173,7 +189,8 @@ def main(argv=None):
     need_outputs = args.compare_sync or args.oracle
     sink = CollectSink() if need_outputs else NullSink()
     rt = AsyncStreamRuntime(pipe, src, sink=sink, controller=ctl,
-                            queue_cap=args.queue_cap)
+                            queue_cap=args.queue_cap,
+                            super_batch=args.super_batch)
     report = rt.run()
     print(f"[live/async] {report.summary()}")
     if tier is not None:

@@ -74,3 +74,22 @@ def collective_bytes(hlo_text: str):
         b = n * DTYPE_BYTES.get(dt, 4)
         per_kind[kind] = per_kind.get(kind, 0) + b
     return per_kind
+
+
+# host-boundary crossings inside a compiled program: send/recv pairs marked
+# as host transfers, infeed/outfeed queues, and host-callback custom-calls
+# (io_callback / pure_callback / debug prints all lower to one of these).
+HOST_TRANSFER_RE = re.compile(
+    r"is_host_transfer=true"
+    r"|\b(?:infeed|outfeed)(?:-done|-start)?\("
+    r"|custom_call_target=\"[^\"]*callback[^\"]*\"", re.I)
+
+
+def host_transfer_ops(hlo_text: str):
+    """HLO lines that move data across the host boundary *inside* the
+    compiled program — the device-residency witness for the persistent
+    K-tick drivers (``runtime.*.persistent_hlo``): an empty list proves the
+    scan's data lane never leaves the device between ticks (arguments and
+    results don't count; they cross once per call by definition)."""
+    return [ln.strip() for ln in hlo_text.splitlines()
+            if HOST_TRANSFER_RE.search(ln)]

@@ -1,0 +1,215 @@
+"""Fused on-device root merge (ISSUE-6 tentpole): the stacked-leaf kernel
+(``scalegate_merge_stacked``), its ScaleGate wrapper (``push_stacked``) and
+the ``RootMerge(device=True)`` round loop.  The contracts under test:
+
+  * kernel conformance: the dispatched stacked op equals the reference on
+    fuzzed rounds — tied taus across leaves, all-invalid rows, non-trivial
+    watermark reports;
+  * round-for-round ready-set parity between the device root and the flat
+    per-leaf host root (the ``push_stacked``-vs-``push`` contract: same
+    ready set and tau grouping, tie order may differ) and against the
+    single-ScaleGate oracle;
+  * steady-state output-shape stability: a leaf with nothing ready still
+    reserves its chunk, so the emitted round shape never flip-flops (the
+    persistent super-batcher depends on this to fill K-tick groups);
+  * the full ``IngestTier(root_device=True)`` matches the host tier and the
+    oracle, including across mid-stream ``add_host``/``remove_host``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import datagen
+from repro.ingest import (IngestTier, SourcePartitioner, collect_tuples,
+                          emitted_taus, single_gate_stream)
+from repro.ingest import leaf as L
+from repro.ingest.root import RootMerge
+from repro.kernels.scalegate_merge.ops import scalegate_merge_stacked_op
+from repro.kernels.scalegate_merge.ref import scalegate_merge_stacked_ref
+
+K = 64
+N_SRC = 4
+TICK = 16
+
+
+def agg_stream(n_ticks=6, seed=0, n_sources=N_SRC):
+    rng = np.random.default_rng(seed)
+    return list(datagen.tweets(rng, n_ticks=n_ticks, tick=TICK,
+                               words_per_tweet=3, vocab=300, k_virt=K,
+                               rate_per_tick=30, n_sources=n_sources))
+
+
+def leaf_rounds(batches, n_sources, n_leaves, cap=TICK):
+    """Mirror the tier's routing: slice each tick per leaf, push through
+    real LeafGates, and return the per-round LeafOut lists (+ final
+    flush round)."""
+    part = SourcePartitioner(n_sources, range(n_leaves))
+    kmax, pw = batches[0].kmax, batches[0].payload_width
+    gates = {l: L.LeafGate(l, n_sources, part.owned_mask(l), cap, kmax, pw)
+             for l in part.leaves}
+    rounds = []
+    for r, b in enumerate(batches):
+        b_np = L.batch_to_np(b)
+        keep = b_np["valid"]
+        leaf_of = part.assignment[np.clip(b_np["source"], 0,
+                                          n_sources - 1)]
+        rounds.append([gates[l].push_round(
+            r, {f: b_np[f][keep & (leaf_of == l)] for f in L.FIELDS})
+            for l in part.leaves])
+    fin = []
+    for l in part.leaves:
+        gates[l].flush_all()
+        fin.append(gates[l].push_round(len(batches), None, final=True))
+    rounds.append(fin)
+    return part, kmax, pw, rounds
+
+
+def drive_root(rounds, part, kmax, pw, device, check_every=1):
+    n_leaves = len(part.leaves)
+    root = RootMerge(max(2 * n_leaves, n_leaves + 4), 2 * TICK, kmax, pw,
+                     part.leaves, out_pad=2 * TICK, device=device,
+                     check_every=check_every)
+    emitted = [root.push(outs) for outs in rounds]
+    root.sync_stats()
+    return emitted
+
+
+# ------------------------------------------------ kernel conformance ------
+
+@pytest.mark.parametrize("rows,c,seed", [(2, 32, 0), (3, 32, 1), (4, 48, 2),
+                                         (6, 96, 3)])
+def test_stacked_kernel_matches_ref(rows, c, seed):
+    """Fuzzed rounds: duplicate taus across leaves (forced ties), whole
+    all-invalid rows, and reports that hold some taus back."""
+    rng = np.random.default_rng(seed)
+    tau2 = rng.integers(0, 40, (rows, c)).astype(np.int32)
+    valid2 = (rng.random((rows, c)) < 0.7).astype(np.int32)
+    valid2[rng.integers(rows)] = 0          # one fully-invalid row
+    src2 = rng.integers(0, 4, (rows, c)).astype(np.int32)
+    reports = rng.integers(5, 35, (rows,)).astype(np.int32)
+
+    got = scalegate_merge_stacked_op(jnp.asarray(tau2), jnp.asarray(src2),
+                                     jnp.asarray(valid2),
+                                     jnp.asarray(reports))
+    want = scalegate_merge_stacked_ref(jnp.asarray(tau2),
+                                       jnp.asarray(src2),
+                                       jnp.asarray(valid2),
+                                       jnp.asarray(reports))
+    for g, w in zip(got, want):
+        assert (np.asarray(g) == np.asarray(w)).all()
+
+
+def test_stacked_kernel_emits_sorted_ready_prefix():
+    rng = np.random.default_rng(7)
+    tau2 = rng.integers(0, 100, (4, 32)).astype(np.int32)
+    valid2 = (rng.random((4, 32)) < 0.5).astype(np.int32)
+    src2 = np.zeros((4, 32), np.int32)
+    reports = np.full((4,), 60, np.int32)
+    order2, ready2, w = scalegate_merge_stacked_op(
+        jnp.asarray(tau2), jnp.asarray(src2), jnp.asarray(valid2),
+        jnp.asarray(reports))
+    order = np.asarray(order2).reshape(-1)
+    ready = np.asarray(ready2).reshape(-1).astype(bool)
+    taus = tau2.reshape(-1)[order]
+    assert int(w[0]) == 60
+    assert (np.diff(taus[ready]) >= 0).all(), "ready lanes out of order"
+    assert (taus[ready] <= 60).all()
+    # every valid tau at-or-below the watermark is released, none dropped
+    assert ready.sum() == ((tau2.reshape(-1) <= 60)
+                           & valid2.reshape(-1).astype(bool)).sum()
+
+
+# ------------------------------------- device vs host root, per round -----
+
+@pytest.mark.parametrize("n_leaves", [1, 2, 3])
+def test_device_root_matches_host_root_per_round(n_leaves):
+    batches = agg_stream()
+    part, kmax, pw, rounds = leaf_rounds(batches, N_SRC, n_leaves)
+    host = drive_root(rounds, part, kmax, pw, device=False)
+    dev = drive_root(rounds, part, kmax, pw, device=True)
+    assert len(host) == len(dev)
+    for i, (h, d) in enumerate(zip(host, dev)):
+        assert collect_tuples([h]) == collect_tuples([d]), \
+            f"round {i}: device ready set != host ready set"
+    taus = emitted_taus(dev)
+    assert (np.diff(taus) >= 0).all(), "device stream lost total order"
+
+
+def test_device_root_matches_single_gate_oracle():
+    batches = agg_stream(n_ticks=8)
+    part, kmax, pw, rounds = leaf_rounds(batches, N_SRC, 2)
+    dev = drive_root(rounds, part, kmax, pw, device=True)
+    oracle = single_gate_stream(batches, N_SRC, cap=96)
+    assert collect_tuples(dev) == collect_tuples(oracle)
+
+
+def test_device_root_output_shape_is_stable_with_idle_leaf():
+    """Source 1 ticks only every other round, so its leaf regularly has
+    ZERO ready rows — yet every emitted round keeps the same lane count
+    (an idle leaf still reserves its chunk).  The persistent super-batcher
+    groups ticks by shape, so a flip-flopping round shape would flush
+    partial K-tick groups and pay full compute for the padding."""
+    from conftest import make_stream_batch
+
+    batches = []
+    for r in range(8):
+        taus = [r * 10 + i for i in range(10)]
+        srcs = [0] * 10
+        if r % 2 == 0:               # source 1 advances every other round
+            taus.append(r * 10 + 5)
+            srcs.append(1)
+        batches.append(make_stream_batch(taus, source=np.asarray(
+            srcs, np.int32)))
+    part, kmax, pw, rounds = leaf_rounds(batches, 2, 2, cap=64)
+    dev = drive_root(rounds, part, kmax, pw, device=True)
+    host = drive_root(rounds, part, kmax, pw, device=False)
+    assert len({rb.batch for rb in dev}) == 1, \
+        f"device round shapes flip-flop: {sorted({rb.batch for rb in dev})}"
+    for i, (h, d) in enumerate(zip(host, dev)):
+        assert collect_tuples([h]) == collect_tuples([d]), \
+            f"round {i}: device ready set != host ready set"
+
+
+# --------------------------------------------- full tier, with churn ------
+
+def tier_kw(**over):
+    kw = dict(worker="thread", leaf_cap=32, root_cap=64)
+    kw.update(over)
+    return kw
+
+
+def test_tier_device_root_matches_host_tier_and_oracle():
+    batches = agg_stream(n_ticks=8)
+    dev = list(IngestTier(batches, N_SRC, 2,
+                          **tier_kw(root_device=True, record=True)))
+    host = list(IngestTier(batches, N_SRC, 2, **tier_kw()))
+    oracle = single_gate_stream(batches, N_SRC, cap=96)
+    assert collect_tuples(dev) == collect_tuples(oracle)
+    assert collect_tuples(dev) == collect_tuples(host)
+    taus = emitted_taus(dev)
+    assert (np.diff(taus) >= 0).all()
+
+
+def test_tier_device_root_across_membership_change():
+    """add_host/remove_host while the device root is live: leaf count (and
+    with it the stacked kernel's row shape) changes mid-stream; the output
+    multiset must still equal the flat oracle."""
+    batches = agg_stream(n_ticks=8)
+    tier = IngestTier(batches, N_SRC, 2, **tier_kw(root_device=True))
+    new_leaf = tier.add_host(at_tick=2)
+    tier.remove_host(0, at_tick=5)
+    outs = list(tier)
+    oracle = single_gate_stream(batches, N_SRC, cap=96)
+    assert collect_tuples(outs) == collect_tuples(oracle)
+    st = tier.stats()
+    assert st.tuples_out == st.tuples_in
+    assert 0 not in st.leaves and new_leaf in st.leaves
+
+
+def test_tier_device_root_join_stream():
+    rng = np.random.default_rng(3)
+    batches = list(datagen.scalejoin(rng, n_ticks=6, tick=TICK, k_virt=1))
+    dev = list(IngestTier(batches, 2, 2, **tier_kw(root_device=True)))
+    oracle = single_gate_stream(batches, 2, cap=96)
+    assert collect_tuples(dev) == collect_tuples(oracle)

@@ -22,7 +22,8 @@ import repro.kernels.segment_aggregate.ops  # noqa: F401
 import repro.kernels.window_join.ops        # noqa: F401
 from repro.kernels import dispatch, lowering
 
-KERNELS = ("scalegate_merge", "segment_aggregate", "window_join",
+KERNELS = ("scalegate_merge", "scalegate_merge_stacked",
+           "segment_aggregate", "window_join",
            "flash_attention", "linear_scan")
 
 
