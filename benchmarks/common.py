@@ -12,20 +12,22 @@ import jax
 ROWS = []
 
 CSV_HEADER = ["name", "us_per_call", "derived", "p50_ms", "p99_ms",
-              "detect_switch_ms"]
+              "detect_switch_ms", "detect_recover_ms"]
 
 
 def emit(name: str, us_per_call: float, derived: str = "", *,
          p50_ms: float = None, p99_ms: float = None,
-         detect_switch_ms: float = None):
-    """One result row.  The optional latency columns (tick-latency p50/p99
-    and detection→switch latency, all ms) come from the live-runtime
-    variants; plain rows leave them empty in the CSV."""
+         detect_switch_ms: float = None, detect_recover_ms: float = None):
+    """One result row.  The optional latency columns (tick-latency p50/p99,
+    detection→switch latency, and the fault-tolerance twin
+    detection→recovered latency, all ms) come from the live-runtime and
+    recovery variants; plain rows leave them empty in the CSV."""
     ROWS.append((name, us_per_call, derived, p50_ms, p99_ms,
-                 detect_switch_ms))
+                 detect_switch_ms, detect_recover_ms))
     extra = "".join(
         f",{k}={v:.2f}" for k, v in [("p50_ms", p50_ms), ("p99_ms", p99_ms),
-                                     ("d2s_ms", detect_switch_ms)]
+                                     ("d2s_ms", detect_switch_ms),
+                                     ("d2r_ms", detect_recover_ms)]
         if v is not None)
     print(f"{name},{us_per_call:.1f},{derived}{extra}", flush=True)
 
@@ -48,10 +50,10 @@ def write_csv(path: str):
     with open(path, "w", newline="") as f:
         w = csv.writer(f)   # quotes the comma-laden derived column
         w.writerow(CSV_HEADER)
-        for name, us, derived, p50, p99, d2s in ROWS:
+        for name, us, derived, p50, p99, d2s, d2r in ROWS:
             w.writerow([name, f"{us:.1f}", derived]
                        + [("" if v is None else f"{v:.3f}")
-                          for v in (p50, p99, d2s)])
+                          for v in (p50, p99, d2s, d2r)])
 
 
 TPUT_RE = re.compile(r"([0-9][0-9.e+]*)\s*t/s")
@@ -63,13 +65,13 @@ def write_bench_json(path: str, query: str, rows, config: dict):
     ``<N> t/s`` figure in the derived column when present, else derived
     from us_per_call; rows without either leave it null."""
     out_rows = []
-    for name, us, derived, p50, p99, d2s in rows:
+    for name, us, derived, p50, p99, d2s, d2r in rows:
         m = TPUT_RE.search(derived or "")
         tput = (float(m.group(1)) if m
                 else (1e6 / us if us else None))
         out_rows.append(dict(name=name, us_per_call=us, tput_tps=tput,
                              p50_ms=p50, p99_ms=p99, detect_switch_ms=d2s,
-                             derived=derived))
+                             detect_recover_ms=d2r, derived=derived))
     with open(path, "w") as f:
         json.dump(dict(query=query, config=config, rows=out_rows), f,
                   indent=2)
@@ -270,6 +272,27 @@ def run_ingest_bench(batches, n_sources: int, n_leaves: int, *, tick: int,
                                 cap=oracle_cap or 3 * tick)
     ok = collect_tuples(tier_ticks) == collect_tuples(oracle)
     return tput, tier_ticks, ok
+
+
+def run_recovery_bench(name: str, cfg, batches, *, mode: str = "stop",
+                       crash_after: int = 6, crash_mid_save: bool = True):
+    """Kill-and-restore as a measured bench row: runs
+    ``repro.launch.recovery.kill_restore_drill`` on an ``api.RuntimeConfig``
+    stack (victim → latest complete manifest → identical rebuilt stack →
+    replay) and emits one parity-gated row whose ``detect_recover_ms``
+    column is the detection→recovered latency — the fault-tolerance twin of
+    the detection→switch column.  ``exactly_once=False`` in the derived
+    text makes it a FAIL row (``failed_rows`` → nonzero bench exit)."""
+    from repro.launch.recovery import kill_restore_drill
+
+    rep = kill_restore_drill(cfg, batches, mode=mode,
+                             crash_after=crash_after,
+                             crash_mid_save=crash_mid_save)
+    emit(name, rep.detect_to_recover_ms * 1e3,
+         f"restored_step={rep.restored_step}, {rep.n_committed} committed "
+         f"+ {rep.n_replayed} replayed, exactly_once={rep.parity}",
+         detect_recover_ms=rep.detect_to_recover_ms)
+    return rep
 
 
 def time_fn(fn, *args, warmup=2, iters=5):

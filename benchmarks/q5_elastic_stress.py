@@ -121,6 +121,24 @@ def main(mesh: int = 0, async_: bool = False):
              p50_ms=rep.p50_ms, p99_ms=rep.p99_ms, detect_switch_ms=d2s)
         assert ok_l, "live elastic run diverged from static oracle"
 
+        # kill-and-restore on the same workload shape: detection→recovered
+        # latency lands in the CSV column next to detection→switch, and the
+        # row FAILs unless the restored run is exactly-once tuple-for-tuple
+        import tempfile
+
+        from benchmarks.common import run_recovery_bench
+        from repro import api
+
+        with tempfile.TemporaryDirectory() as ckdir:
+            cfg = api.RuntimeConfig(
+                op="count", wa=500, ws=1000, wt="multi", k_virt=K_VIRT,
+                out_cap=1024, extra_slots=2, n_max=32, n_active=2,
+                stash_cap=256, checkpoint_dir=ckdir, checkpoint_every=4)
+            rrep = run_recovery_bench("q5_recovery", cfg, batches,
+                                      mode="stop", crash_after=10,
+                                      crash_mid_save=True)
+            assert rrep.parity, "recovery replay lost exactly-once parity"
+
 
 if __name__ == "__main__":
     import argparse

@@ -1,0 +1,255 @@
+"""The unified runtime-config API: one dataclass, one facade, one resume.
+
+Every launcher, benchmark, and drill used to assemble the stack by hand —
+operator here, mesh there, ingest tier, controller, runtime, each with its
+own flag zoo.  ``RuntimeConfig`` is the single declarative description of
+a run (operator + windows, parallelism + mesh, ingest tier, runtime knobs,
+fault tolerance) and ``build_runtime`` is the one constructor:
+
+    cfg = RuntimeConfig(n_sources=4, ingest_hosts=2,
+                        checkpoint_dir="/tmp/ck", checkpoint_every=8)
+    rt = build_runtime(cfg, source)
+    report = rt.run()
+
+The config is JSON-serializable and rides inside every checkpoint
+manifest, which is what makes restore *closed*: ``resume_runtime`` reads
+the manifest, rebuilds the identical stack from the embedded config,
+restores pipeline + ingest-tier state from the latest complete step, and
+replays the source from the snapshot's frontier — exactly-once when the
+victim's outputs below the restored step are treated as committed
+(``CollectSink.results(before_tick=step)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.checkpoint import stream as ckstream
+from repro.core.async_runtime import AsyncStreamRuntime, RunReport
+from repro.core.windows import WindowSpec
+from repro.io.sources import ReplaySource
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    """Declarative description of one streaming run.  JSON-serializable
+    (``to_json``/``from_json``) so a checkpoint manifest can carry it and
+    ``resume_runtime`` can rebuild an identical stack."""
+    # -- operator ----------------------------------------------------------
+    op: str = "count"              # registry key: count | longest
+    wa: int = 500                  # window advance
+    ws: int = 1000                 # window size
+    wt: str = "multi"              # window type
+    k_virt: int = 256
+    out_cap: int = 1024
+    extra_slots: int = 2
+    # -- parallelism -------------------------------------------------------
+    n_max: int = 16
+    n_active: int = 2
+    stash_cap: int = 256
+    mesh_devices: int = 0          # 0 = single-device VSNPipeline
+    backend: Optional[str] = None
+    # -- sources / ingest tier --------------------------------------------
+    n_sources: int = 1
+    ingest_hosts: int = 0          # 0 = no tier (source feeds the runtime)
+    ingest_worker: str = "thread"  # thread | process | inline
+    leaf_cap: int = 128
+    root_cap: int = 256
+    chan_cap: int = 4
+    max_leaves: int = 0            # 0 = IngestTier's default headroom
+    out_pad: int = 32
+    root_device: bool = False
+    # -- runtime -----------------------------------------------------------
+    queue_cap: int = 4
+    super_batch: int = 1
+    controller: str = "none"       # none | threshold | predictive
+    capacity_per_instance: float = 4000.0
+    # -- fault tolerance ---------------------------------------------------
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0      # pipeline ticks between snapshots
+
+    def __post_init__(self):
+        if self.checkpoint_every and self.super_batch > 1:
+            assert self.checkpoint_every % self.super_batch == 0, (
+                "checkpoint_every must be a multiple of super_batch: "
+                "boundaries inside a super-batch group are never cut")
+
+    @property
+    def effective_max_leaves(self) -> int:
+        """What ``IngestTier`` actually allocates for the leaf axis — the
+        restore templates need the real array shapes."""
+        n = self.ingest_hosts
+        return self.max_leaves or max(2 * n, n + 4)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "RuntimeConfig":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+# ---------------------------------------------------------------- pieces --
+
+def make_op(cfg: RuntimeConfig):
+    from repro.core import aggregate
+    window = WindowSpec(wa=cfg.wa, ws=cfg.ws, wt=cfg.wt)
+    kw = dict(k_virt=cfg.k_virt, out_cap=cfg.out_cap,
+              extra_slots=cfg.extra_slots, n_inputs=max(cfg.n_sources, 1))
+    if cfg.op == "count":
+        return aggregate.count_aggregate(window, **kw)
+    if cfg.op == "longest":
+        return aggregate.longest_aggregate(window, **kw)
+    raise ValueError(f"unknown operator {cfg.op!r}")
+
+
+def make_pipeline(cfg: RuntimeConfig):
+    from repro.core.runtime import MeshPipeline, VSNPipeline
+    op = make_op(cfg)
+    if cfg.mesh_devices:
+        from repro.launch.mesh import make_stream_mesh
+        mode = "fast-agg" if cfg.op == "count" else "general"
+        return MeshPipeline(op, make_stream_mesh(cfg.mesh_devices),
+                            stash_cap=cfg.stash_cap, mode=mode,
+                            agg_kind="count", backend=cfg.backend,
+                            n_max=cfg.n_max, n_active=cfg.n_active)
+    return VSNPipeline(op, n_max=cfg.n_max, n_active=cfg.n_active,
+                       stash_cap=cfg.stash_cap)
+
+
+def make_controller(cfg: RuntimeConfig):
+    from repro.core.controller import (PredictiveController,
+                                       ThresholdController)
+    if cfg.controller == "none":
+        return None
+    if cfg.controller == "threshold":
+        return ThresholdController(
+            n_max=cfg.n_max, k_virt=cfg.k_virt,
+            capacity_per_instance=cfg.capacity_per_instance,
+            n_active=cfg.n_active)
+    if cfg.controller == "predictive":
+        return PredictiveController(
+            n_max=cfg.n_max, k_virt=cfg.k_virt,
+            comparisons_per_s_per_instance=3e7, ws_seconds=1.0,
+            n_active=cfg.n_active)
+    raise ValueError(f"unknown controller {cfg.controller!r}")
+
+
+def make_tier(cfg: RuntimeConfig, source, *, record: bool = False,
+              restore: Optional[Dict] = None):
+    from repro.ingest import IngestTier
+    return IngestTier(
+        source, cfg.n_sources, cfg.ingest_hosts, worker=cfg.ingest_worker,
+        leaf_cap=cfg.leaf_cap, root_cap=cfg.root_cap,
+        chan_cap=cfg.chan_cap, max_leaves=cfg.effective_max_leaves,
+        backend=cfg.backend, record=record,
+        schedule=getattr(source, "schedule", None), out_pad=cfg.out_pad,
+        root_device=cfg.root_device, snapshot_every=cfg.checkpoint_every,
+        restore=restore)
+
+
+# ---------------------------------------------------------------- facade --
+
+@dataclasses.dataclass
+class Runtime:
+    """The assembled stack: everything ``build_runtime`` constructed, with
+    the run entry point.  ``tier`` is None without an ingest tier;
+    ``checkpointer`` is None without fault tolerance configured."""
+    config: RuntimeConfig
+    pipeline: Any
+    runtime: AsyncStreamRuntime
+    tier: Any = None
+    checkpointer: Optional[ckstream.StreamCheckpointer] = None
+    restored_step: Optional[int] = None   # set by resume_runtime
+
+    @property
+    def sink(self):
+        return self.runtime.sink
+
+    def run(self, max_ticks: Optional[int] = None) -> RunReport:
+        return self.runtime.run(max_ticks=max_ticks)
+
+
+def build_runtime(cfg: RuntimeConfig, source, *, pipeline=None, sink=None,
+                  controller=None, metrics=None, restore: Optional[Dict] = None,
+                  record_tier: bool = False) -> Runtime:
+    """Construct IngestTier -> AsyncStreamRuntime -> VSN/Mesh pipeline from
+    one config.  ``restore`` (from ``resume_runtime``) installs snapshot
+    state into every layer *before* the runtime is built — the runtime
+    seeds its epoch shadows and host frontier from the pipeline at
+    construction, so ordering is part of the contract, not an accident.
+    """
+    if pipeline is None:
+        pipeline = make_pipeline(cfg)
+    if restore is not None:
+        pipeline.import_state(restore["pipe"])
+    tier = None
+    src = source
+    if cfg.ingest_hosts:
+        tier = make_tier(cfg, source, record=record_tier,
+                         restore=(restore or {}).get("tier"))
+        src = tier
+    if controller is None:
+        controller = make_controller(cfg)
+    sck = None
+    if cfg.checkpoint_dir and cfg.checkpoint_every:
+        sck = ckstream.StreamCheckpointer(
+            Checkpointer(cfg.checkpoint_dir), cfg.checkpoint_every,
+            pipeline, tier=tier, config=cfg)
+    rt = AsyncStreamRuntime(
+        pipeline, src, sink=sink, controller=controller,
+        queue_cap=cfg.queue_cap, metrics=metrics,
+        super_batch=cfg.super_batch, checkpointer=sck,
+        tick0=(restore or {}).get("tick0", 0))
+    return Runtime(config=cfg, pipeline=pipeline, runtime=rt, tier=tier,
+                   checkpointer=sck)
+
+
+def resume_runtime(checkpoint_dir: str, batches, *, sink=None,
+                   controller=None, metrics=None,
+                   step: Optional[int] = None) -> Runtime:
+    """Rebuild and restore the stack from the latest complete checkpoint
+    under ``checkpoint_dir`` (or an explicit ``step``).
+
+    ``batches`` is the replay log — the full original stream (a
+    ``ReplaySource``, a list of ticks, or a ``.npz`` path recorded by
+    ``io.sources.save_stream``); the suffix at or past the snapshot's
+    source frontier is replayed, everything before it is already in the
+    snapshot.  A crash mid-save left no manifest, so ``latest_step`` lands
+    on the previous complete step automatically.
+    """
+    ck = Checkpointer(checkpoint_dir)
+    if step is None:
+        step = ck.latest_step()
+    if step is None:
+        raise FileNotFoundError(
+            f"no complete checkpoint under {checkpoint_dir}")
+    extra = ck.manifest(step)["extra"]
+    cfg = RuntimeConfig.from_json(extra["config"])
+    pipeline = make_pipeline(cfg)
+    like = ckstream.like_tree(
+        pipeline, extra, n_sources=cfg.n_sources, leaf_cap=cfg.leaf_cap,
+        root_cap=cfg.root_cap, max_leaves=cfg.effective_max_leaves,
+        out_pad=cfg.out_pad, root_device=cfg.root_device)
+    tree = ck.restore(step, like)
+    restore: Dict[str, Any] = {"pipe": tree["pipe"], "tick0": int(step)}
+    if extra.get("tier") is not None:
+        restore["tier"] = ckstream.tier_restore_dict(tree, extra["tier"])
+    source_ticks = int(extra["source_ticks"])
+    if isinstance(batches, str):
+        from repro.io.sources import load_stream
+        src = load_stream(batches, from_tick=source_ticks)
+    elif isinstance(batches, ReplaySource):
+        src = batches.from_tick(source_ticks)
+    else:
+        src = ReplaySource(list(batches),
+                           n_inputs=max(cfg.n_sources, 1)).from_tick(
+                               source_ticks)
+    rt = build_runtime(cfg, src, pipeline=pipeline, sink=sink,
+                       controller=controller, metrics=metrics,
+                       restore=restore)
+    rt.restored_step = int(step)
+    return rt

@@ -1,0 +1,17 @@
+"""Fault-tolerance layer: atomic-manifest checkpoints + streaming snapshots.
+
+``checkpoint`` is the storage substrate (async saves, atomic manifest
+commit, shape-checked restore); ``stream`` aligns it with the streaming
+runtime (epoch-consistent tick-boundary capture of pipeline + ingest-tier
+state, manifest-carried ``RuntimeConfig`` for identical-stack rebuild).
+"""
+
+from repro.checkpoint.checkpoint import (Checkpointer, latest_step,
+                                         read_manifest, restore,
+                                         restore_latest, save, wait)
+from repro.checkpoint.stream import StreamCheckpointer
+
+__all__ = [
+    "Checkpointer", "StreamCheckpointer", "latest_step", "read_manifest",
+    "restore", "restore_latest", "save", "wait",
+]

@@ -3,9 +3,16 @@
 Layout: ``<dir>/step_<N>/`` holds one ``.npy`` per pytree leaf plus a
 ``MANIFEST.json`` written *last* (the commit point): a crash mid-save leaves
 no manifest and the step is invisible to ``latest_step`` — restart resumes
-from the previous complete step (tested by the kill-drill in
-tests/test_checkpoint.py).  Saves run on a background thread (training never
-blocks on I/O); ``wait()`` joins before the next save of the same dir.
+from the previous complete step (tested by the kill-drills in
+tests/test_substrate.py and tests/test_checkpoint_restore.py).  Saves run on
+a background thread (the pipeline never blocks on I/O); ``wait()`` joins
+before the next save of the same ``Checkpointer``.
+
+``Checkpointer`` owns its pending-save thread, so independent runtimes
+checkpointing concurrently (even into the same directory tree) never race on
+shared module state.  The module-level ``save/wait/...`` functions are kept
+as thin wrappers over a lock-guarded per-directory registry for existing
+callers (launch/train.py, the substrate tests).
 
 At real multi-pod scale each host writes only its local shards of the
 addressable arrays and host 0 commits the manifest after a barrier; the
@@ -25,12 +32,6 @@ import jax
 import numpy as np
 
 _MANIFEST = "MANIFEST.json"
-_pending: dict = {}
-
-
-def _leaf_paths(tree) -> list:
-    leaves, treedef = jax.tree.flatten(tree)
-    return leaves, treedef
 
 
 def _to_storable(arr: np.ndarray):
@@ -52,46 +53,115 @@ def _from_storable(arr: np.ndarray, dtype_tag: str):
     return arr
 
 
+class Checkpointer:
+    """Per-instance checkpoint manager: one pending async save at a time,
+    atomic manifest commits, shape-checked restore.
+
+    Each instance owns its own pending-save thread and lock; two runtimes
+    with their own ``Checkpointer`` never serialize (or race) through shared
+    module state.
+    """
+
+    def __init__(self, ckpt_dir: str):
+        self.dir = str(ckpt_dir)
+        self._pending: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- save --
+    def save(self, step: int, tree: Any, *, async_: bool = True,
+             extra: Optional[dict] = None):
+        """Snapshot ``tree`` as step ``step``.  Leaves are materialized to
+        host *before* returning (donation-safe: the caller may overwrite the
+        device buffers immediately); the disk write happens on a background
+        thread unless ``async_=False``."""
+        leaves, _ = jax.tree.flatten(tree)
+        host_leaves = [np.asarray(l) for l in leaves]  # device->host now
+
+        def _write():
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp, exist_ok=True)
+            dtype_tags = []
+            for i, arr in enumerate(host_leaves):
+                store, tag = _to_storable(arr)
+                dtype_tags.append(tag)
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), store)
+            manifest = {
+                "step": step,
+                "n_leaves": len(host_leaves),
+                "shapes": [list(a.shape) for a in host_leaves],
+                "dtypes": dtype_tags,
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.replace(tmp, final)                     # atomic commit
+
+        if async_:
+            t = threading.Thread(target=_write, daemon=True)
+            with self._lock:
+                # publish and start atomically: anything wait() pops from
+                # _pending is guaranteed to have been started
+                prev, self._pending = self._pending, t
+                t.start()
+            if prev is not None:
+                prev.join()        # one pending save at a time
+        else:
+            _write()
+
+    def wait(self):
+        """Join the in-flight async save, if any."""
+        with self._lock:
+            t, self._pending = self._pending, None
+        if t is not None:
+            t.join()
+
+    # ---------------------------------------------------------- restore --
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.dir)
+
+    def manifest(self, step: int) -> dict:
+        """The committed manifest of ``step`` (includes caller ``extra``)."""
+        path = os.path.join(self.dir, f"step_{step:08d}", _MANIFEST)
+        with open(path) as f:
+            return json.load(f)
+
+    def restore(self, step: int, like: Any) -> Any:
+        return restore(self.dir, step, like)
+
+    def restore_latest(self, like: Any):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like)
+
+
+# -------------------------------------------------- module-level wrappers --
+# Back-compat facade over a lock-guarded per-directory registry.  New code
+# should construct a Checkpointer (api.build_runtime does) — the registry
+# exists so legacy callers keyed only by dir keep working without sharing
+# unguarded global state.
+_registry: dict = {}
+_registry_lock = threading.Lock()
+
+
+def _for_dir(ckpt_dir: str) -> Checkpointer:
+    with _registry_lock:
+        ck = _registry.get(ckpt_dir)
+        if ck is None:
+            ck = _registry[ckpt_dir] = Checkpointer(ckpt_dir)
+        return ck
+
+
 def save(ckpt_dir: str, step: int, tree: Any, *, async_: bool = True,
          extra: Optional[dict] = None):
-    leaves, treedef = jax.tree.flatten(tree)
-    host_leaves = [np.asarray(l) for l in leaves]   # device->host before fork
-
-    def _write():
-        final = os.path.join(ckpt_dir, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(tmp, exist_ok=True)
-        dtype_tags = []
-        for i, arr in enumerate(host_leaves):
-            store, tag = _to_storable(arr)
-            dtype_tags.append(tag)
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), store)
-        manifest = {
-            "step": step,
-            "n_leaves": len(host_leaves),
-            "shapes": [list(a.shape) for a in host_leaves],
-            "dtypes": dtype_tags,
-            "extra": extra or {},
-        }
-        with open(os.path.join(tmp, _MANIFEST), "w") as f:
-            json.dump(manifest, f)
-        shutil.rmtree(final, ignore_errors=True)
-        os.replace(tmp, final)                      # atomic commit
-
-    if async_:
-        wait(ckpt_dir)
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-        _pending[ckpt_dir] = t
-    else:
-        _write()
+    _for_dir(ckpt_dir).save(step, tree, async_=async_, extra=extra)
 
 
 def wait(ckpt_dir: str):
-    t = _pending.pop(ckpt_dir, None)
-    if t is not None:
-        t.join()
+    _for_dir(ckpt_dir).wait()
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -110,6 +180,10 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
             continue
         best = s if best is None else max(best, s)
     return best
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    return _for_dir(ckpt_dir).manifest(step)
 
 
 def restore(ckpt_dir: str, step: int, like: Any) -> Any:

@@ -160,9 +160,15 @@ class AsyncStreamRuntime:
 
     def __init__(self, pipeline, source, sink=None, controller=None,
                  queue_cap: int = 4, metrics: Optional[MetricsBus] = None,
-                 super_batch: int = 1):
+                 super_batch: int = 1, checkpointer=None, tick0: int = 0):
         self.pipeline = pipeline
         self.source = source
+        # fault tolerance: ``checkpointer`` (a StreamCheckpointer) is asked
+        # at every tick boundary, BEFORE the dispatch that donates the
+        # pipeline state; ``tick0`` offsets tick ids on a resumed run so
+        # sink tick ids and checkpoint steps stay absolute across restarts
+        self.checkpointer = checkpointer
+        self.tick0 = int(tick0)
         self.sink = sink if sink is not None else CollectSink()
         self.controller = controller
         # super_batch=K stages K consecutive same-shape ticks as ONE
@@ -204,11 +210,11 @@ class AsyncStreamRuntime:
                 self._ingest_super(max_ticks, n_inputs, k_virt, with_hist,
                                    frontier)
             else:
-                for tick_id, b in enumerate(self.source):
-                    if max_ticks is not None and tick_id >= max_ticks:
+                for i, b in enumerate(self.source):
+                    if max_ticks is not None and i >= max_ticks:
                         break
-                    meta = tick_meta(b, tick_id, n_inputs, k_virt, frontier,
-                                     with_hist=with_hist)
+                    meta = tick_meta(b, self.tick0 + i, n_inputs, k_virt,
+                                     frontier, with_hist=with_hist)
                     staged = self.pipeline.stage(b)   # async transfer
                     self.queue.put(StagedTick(meta, staged))
         except BaseException as e:              # surfaced after join()
@@ -240,15 +246,15 @@ class AsyncStreamRuntime:
                                        n_pad=n_pad))
             group, metas = [], []
 
-        for tick_id, b in enumerate(self.source):
-            if max_ticks is not None and tick_id >= max_ticks:
+        for i, b in enumerate(self.source):
+            if max_ticks is not None and i >= max_ticks:
                 break
             key = (b.batch, b.kmax, b.payload_width)
             if group and key != gkey:
                 flush()
             gkey = key
-            metas.append(tick_meta(b, tick_id, n_inputs, k_virt, frontier,
-                                   with_hist=with_hist))
+            metas.append(tick_meta(b, self.tick0 + i, n_inputs, k_virt,
+                                   frontier, with_hist=with_hist))
             group.append(b)
             if len(group) == K:
                 flush()
@@ -334,6 +340,13 @@ class AsyncStreamRuntime:
                     meta = self._combine_meta(item.metas)
                 else:
                     meta = item.meta
+                if self.checkpointer is not None:
+                    # the boundary BEFORE this tick: pipeline state covers
+                    # every tick < meta.tick_id and nothing of this one;
+                    # capture is synchronous-to-host (the dispatch below
+                    # donates sg/sigma), the disk write is async
+                    self.checkpointer.maybe_save(meta.tick_id,
+                                                 meta.frontier_before)
                 rc = self._decide(meta)
                 t0 = time.perf_counter()
                 if isinstance(item, StagedSuper):
@@ -367,6 +380,8 @@ class AsyncStreamRuntime:
             self.queue.close()
             self.metrics.stop()
             th.join(timeout=30)
+            if self.checkpointer is not None:
+                self.checkpointer.wait()   # never exit with a torn save
         if self._ingest_error is not None:
             raise self._ingest_error
         return make_report(self.metrics, self.reconfig_trace, self.switches,

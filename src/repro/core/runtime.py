@@ -152,6 +152,31 @@ class VSNPipeline:
                 incoming.payload_width)
             self._sg_ready = True
 
+    def ensure_gate_for(self, kmax: int, payload_width: int):
+        """Initialize the gate from dimensions alone (no data tick yet) —
+        the restore path needs a fully-shaped state template before any
+        tuple has been staged."""
+        self._ensure_gate(T.empty_batch(1, kmax, payload_width))
+
+    # -- checkpoint/restore ------------------------------------------------
+    def export_state(self) -> dict:
+        """The pipeline's epoch-consistent mutable state at a tick boundary
+        (ScaleGate stash + watermark, EpochState incl. any pending
+        ``e_next``/``fmu_next`` switch, sigma) as one checkpointable pytree.
+        The caller must materialize it to host (``np.asarray``) before the
+        next dispatch — ``run_persistent_staged`` donates sg and sigma."""
+        assert self._sg_ready, "export_state() before the first staged tick"
+        return {"sg": self.sg, "epoch": self.epoch, "sigma": self.sigma}
+
+    def import_state(self, state: dict):
+        """Install a snapshot produced by ``export_state`` (possibly via a
+        checkpoint roundtrip).  Counterpart of ``export_state``; the epoch
+        shadow state readers (async runtime) re-derive from ``self.epoch``."""
+        self.sg = jax.tree.map(jnp.asarray, state["sg"])
+        self.epoch = jax.tree.map(jnp.asarray, state["epoch"])
+        self.sigma = jax.tree.map(jnp.asarray, state["sigma"])
+        self._sg_ready = True
+
     def _inst_load(self, ready: T.TupleBatch, epoch) -> jax.Array:
         """Per-instance load of one tick under the in-effect f_mu: one unit
         per (valid data lane, key-set entry) routed to its owner — the
@@ -512,6 +537,34 @@ class MeshPipeline:
                 self.op.n_inputs, self.stash_cap, incoming.kmax,
                 incoming.payload_width)
             self._sg_ready = True
+
+    def ensure_gate_for(self, kmax: int, payload_width: int):
+        """Initialize the gate from dimensions alone (restore templates)."""
+        self._ensure_gate(T.empty_batch(1, kmax, payload_width))
+
+    # -- checkpoint/restore ------------------------------------------------
+    def export_state(self) -> dict:
+        """Same contract as ``VSNPipeline.export_state``.  ``np.asarray``
+        on the key-block-sharded sigma gathers the shards, so the snapshot
+        the checkpoint layer materializes is the full logical array."""
+        assert self._sg_ready, "export_state() before the first staged tick"
+        return {"sg": self.sg, "epoch": self.epoch, "sigma": self.sigma}
+
+    def import_state(self, state: dict):
+        """Install a snapshot: sg/epoch re-replicated across the mesh,
+        sigma re-sharded into fixed key blocks (``vsn.mesh_device_put``) —
+        a snapshot taken on N devices restores onto any divisor mesh."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        rep = NamedSharding(self.mesh, P())
+        self.sg = jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a), rep), state["sg"])
+        self.epoch = jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a), rep), state["epoch"])
+        host_sigma = jax.tree.map(np.asarray, state["sigma"])
+        self.sigma = vsn.mesh_device_put(host_sigma, self.mesh, self.axis,
+                                         self.op.k_virt)
+        self._sg_ready = True
 
     def _frontier_after(self, batches, frontier0=None):
         """Per-source last forwarded tau once ``batches`` have been pushed:

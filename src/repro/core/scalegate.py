@@ -229,3 +229,37 @@ def add_sources(state: ScaleGateState, mask: jax.Array, gamma) -> ScaleGateState
 def remove_sources(state: ScaleGateState, mask: jax.Array) -> ScaleGateState:
     """ESG removeSources — flush semantics of §6."""
     return dataclasses.replace(state, wmark=wm.remove_sources(state.wmark, mask))
+
+
+# ------------------------------------------------- checkpoint export/import --
+_STASH_FIELDS = tuple(f.name for f in dataclasses.fields(T.TupleBatch))
+
+
+def export_np(state: ScaleGateState) -> dict:
+    """Host-side snapshot of a gate (stash + frontier + overflow) as a dict
+    of plain numpy arrays: a checkpointable pytree that is also picklable
+    across process-worker channels."""
+    import numpy as np
+    return {
+        "stash": {f: np.asarray(getattr(state.stash, f))
+                  for f in _STASH_FIELDS},
+        "wmark": wm.export_np(state.wmark),
+        "overflow": np.asarray(state.overflow),
+    }
+
+
+def import_np(d: dict) -> ScaleGateState:
+    return ScaleGateState(
+        stash=T.TupleBatch(**{f: jnp.asarray(d["stash"][f])
+                              for f in _STASH_FIELDS}),
+        wmark=wm.import_np(d["wmark"]),
+        overflow=jnp.asarray(d["overflow"], jnp.int32),
+    )
+
+
+def template_np(n_sources: int, capacity: int, kmax: int,
+                payload_width: int) -> dict:
+    """Zero-filled ``export_np``-shaped dict: the restore ``like`` template
+    for a gate with these dimensions."""
+    return export_np(init_scalegate(n_sources, capacity, kmax,
+                                    payload_width))

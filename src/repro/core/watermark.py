@@ -125,3 +125,17 @@ def add_sources(state: WatermarkState, mask: jax.Array, gamma) -> WatermarkState
 def remove_sources(state: WatermarkState, mask: jax.Array) -> WatermarkState:
     """ESG ``removeSources``: flush — the leaving source stops gating W."""
     return dataclasses.replace(state, active=state.active & ~mask)
+
+
+# ------------------------------------------------- checkpoint export/import --
+def export_np(state: WatermarkState) -> dict:
+    """Host-side snapshot of the frontier (checkpoint leaf dict).  Picklable
+    plain numpy — safe to ship across process-worker channels."""
+    import numpy as np
+    return {"frontier": np.asarray(state.frontier),
+            "active": np.asarray(state.active)}
+
+
+def import_np(d: dict) -> WatermarkState:
+    return WatermarkState(frontier=jnp.asarray(d["frontier"], jnp.int32),
+                          active=jnp.asarray(d["active"], bool))

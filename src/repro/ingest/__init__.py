@@ -10,14 +10,15 @@ bounded-channel backpressure root→leaf→source, and a drop-in iterable
 source for ``AsyncStreamRuntime``.
 """
 
-from repro.ingest.leaf import LeafGate, LeafOut
+from repro.ingest.leaf import LeafGate, LeafOut, LeafSnap
 from repro.ingest.partitioner import SourcePartitioner
 from repro.ingest.root import RootMerge
-from repro.ingest.tier import (IngestStats, IngestTier, collect_tuples,
-                               emitted_taus, single_gate_stream)
+from repro.ingest.tier import (IngestStats, IngestTier, LeafFailure,
+                               collect_tuples, emitted_taus,
+                               single_gate_stream)
 
 __all__ = [
-    "IngestStats", "IngestTier", "LeafGate", "LeafOut", "RootMerge",
-    "SourcePartitioner", "collect_tuples", "emitted_taus",
-    "single_gate_stream",
+    "IngestStats", "IngestTier", "LeafFailure", "LeafGate", "LeafOut",
+    "LeafSnap", "RootMerge", "SourcePartitioner", "collect_tuples",
+    "emitted_taus", "single_gate_stream",
 ]

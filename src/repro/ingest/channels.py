@@ -19,11 +19,17 @@ from __future__ import annotations
 
 import queue as _stdlib_queue
 import threading
+import time
 from typing import Any, Optional
 
 from repro.io.queues import TIMEOUT, BoundedQueue, QueueClosed
 
 MP_CLOSE = "__ingest_channel_close__"
+
+# granularity of the blocked-put close poll: an mp.Queue has no condition
+# variable we can hook close() into, so a blocked put re-checks the local
+# closed flag this often (worst-case extra latency on close, not on data)
+_PUT_POLL_S = 0.05
 
 
 class MpChannel:
@@ -35,9 +41,26 @@ class MpChannel:
         self._send_closed = False
 
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
-        if self._send_closed:
-            raise QueueClosed
-        self._q.put(item, timeout=timeout)
+        """Blocking put with the BoundedQueue close contract: ``close()``
+        during a blocked put raises ``QueueClosed`` within ``_PUT_POLL_S``
+        instead of waiting out ``timeout`` — the router thread stuck
+        feeding a SIGKILLed leaf's full queue must unblock as soon as the
+        tier starts draining, or restore-after-kill hangs on it."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._send_closed:
+                raise QueueClosed
+            slice_s = _PUT_POLL_S
+            if deadline is not None:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise TimeoutError("MpChannel.put timed out")
+                slice_s = min(slice_s, left)
+            try:
+                self._q.put(item, timeout=slice_s)
+                return
+            except _stdlib_queue.Full:
+                continue
 
     def get(self, timeout: Optional[float] = None) -> Any:
         if self._recv_closed:

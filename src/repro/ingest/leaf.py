@@ -108,13 +108,26 @@ class LeafOut:
         return int(self.ready["tau"].shape[0])
 
 
+@dataclasses.dataclass
+class LeafSnap:
+    """One leaf's answer to a snapshot round: its full exported gate state
+    (picklable numpy only — crosses process channels like any LeafOut).
+    Riding the same round stream as tick messages is what pins the snapshot
+    to an exact tick boundary: the state is captured after the leaf pushed
+    round ``round_id - 1`` and before it sees the next tick."""
+    leaf_id: int
+    round_id: int
+    state: Dict
+
+
 class LeafGate:
     """The pure leaf state machine; drivable inline, from a thread, or from
     a child process (see the worker loops below)."""
 
     def __init__(self, leaf_id: int, n_sources: int, owned: np.ndarray,
                  cap: int, kmax: int, payload_width: int,
-                 backend: Optional[str] = None, chunk: Optional[int] = None):
+                 backend: Optional[str] = None, chunk: Optional[int] = None,
+                 state: Optional[Dict] = None):
         import jax.numpy as jnp
         self.leaf_id = leaf_id
         self.n_sources = n_sources
@@ -124,10 +137,20 @@ class LeafGate:
         # chunk width: combined merge size is cap + chunk; keeping it a
         # power of two lets merge_order take the bitonic-kernel path
         self.chunk = chunk or cap
-        self.state = scalegate.init_scalegate(
-            n_sources, cap, kmax, payload_width,
-            active=jnp.asarray(owned, bool))
+        if state is not None:
+            # restore: stash / frontier / active mask all come from the
+            # snapshot (the owned mask is part of the exported state)
+            self.state = scalegate.import_np(state)
+        else:
+            self.state = scalegate.init_scalegate(
+                n_sources, cap, kmax, payload_width,
+                active=jnp.asarray(owned, bool))
         self._push = _jit_push(backend)
+
+    def export_state(self) -> Dict:
+        """Picklable numpy snapshot of the gate (stash + frontier +
+        overflow); ``LeafGate(..., state=...)`` restores it exactly."""
+        return scalegate.export_np(self.state)
 
     # -- per-round work ------------------------------------------------------
     def push_round(self, round_id: int, slice_np: Optional[Dict] = None,
@@ -194,8 +217,9 @@ def run_gate_loop(gate: LeafGate, recv, send) -> None:
     stop/flush; shared verbatim by thread and process workers.
 
     Messages: ``("tick", round, slice_np)`` | ``("cmd", round, ops)`` |
-    ``("stop",)``.  Every tick/cmd message produces exactly one ``LeafOut``
-    via ``send`` — the root's round barrier counts on it.
+    ``("snap", round)`` | ``("stop",)``.  Every tick/cmd/snap message
+    produces exactly one answer (``LeafOut`` / ``LeafSnap``) via ``send`` —
+    the root's round barrier counts on it.
     """
     from repro.io.queues import QueueClosed
     while True:
@@ -213,6 +237,8 @@ def run_gate_loop(gate: LeafGate, recv, send) -> None:
             send(gate.push_round(msg[1], None, final=leaving))
             if leaving:
                 break
+        elif kind == "snap":
+            send(LeafSnap(gate.leaf_id, msg[1], gate.export_state()))
         else:                                         # pragma: no cover
             raise ValueError(f"unknown message {msg!r}")
 
@@ -230,7 +256,7 @@ def process_worker_main(cfg: Dict, in_q, out_q) -> None:
     gate = LeafGate(cfg["leaf_id"], cfg["n_sources"],
                     np.asarray(cfg["owned"], bool), cfg["cap"], cfg["kmax"],
                     cfg["payload_width"], backend=cfg.get("backend"),
-                    chunk=cfg.get("chunk"))
+                    chunk=cfg.get("chunk"), state=cfg.get("state"))
 
     def recv():
         msg = in_q.get()

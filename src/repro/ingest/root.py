@@ -301,3 +301,46 @@ class RootMerge:
             self._out_valid.clear()
         if self.device:
             self.wmark = max(self.wmark, int(self.state.wmark.value()))
+
+    # -- checkpoint/restore --------------------------------------------------
+    @staticmethod
+    def effective_cap(cap: int, out_pad: int, device: bool) -> int:
+        """The stash capacity a ``RootMerge(cap=cap)`` actually allocates
+        (the device path row-aligns it) — restore templates need the real
+        array shapes."""
+        if not device:
+            return cap
+        chunk = bucket(out_pad)
+        return ((cap + chunk - 1) // chunk) * chunk
+
+    def export_state(self) -> Dict:
+        """Numpy snapshot of the root gate *and* its host-side invariant
+        counters, taken at a round boundary (the tier's consumer thread is
+        the only mutator, so calling between rounds is race-free)."""
+        self.sync_stats()
+        return {
+            "sg": scalegate.export_np(self.state),
+            "meta": {
+                "last_emitted_tau": self.last_emitted_tau,
+                "wmark": self.wmark,
+                "leaf_overflow": dict(self.leaf_overflow),
+                "tuples_out": self.tuples_out,
+                "rounds": self.rounds,
+                "last_overflow_warned": self._last_overflow_warned,
+            },
+        }
+
+    def import_state(self, snap: Dict) -> None:
+        got = np.asarray(snap["sg"]["stash"]["tau"]).shape[0]
+        want = self.state.capacity
+        assert got == want, f"root stash capacity changed: {got} != {want}"
+        self.state = scalegate.import_np(snap["sg"])
+        meta = snap["meta"]
+        self.last_emitted_tau = int(meta["last_emitted_tau"])
+        self.wmark = int(meta["wmark"])
+        self.leaf_overflow = {int(k): int(v)
+                              for k, v in meta["leaf_overflow"].items()}
+        self.tuples_out = int(meta["tuples_out"])
+        self.rounds = int(meta["rounds"])
+        self._last_overflow_warned = int(meta["last_overflow_warned"])
+        self._out_valid = []

@@ -57,6 +57,18 @@ from repro.io.queues import TIMEOUT, BoundedQueue, QueueClosed
 ROUND_TIMEOUT_S = 120.0       # hang guard: a missing leaf answer is a bug
 
 
+class LeafFailure(RuntimeError):
+    """A leaf worker process died before answering its round (unplanned
+    host loss — SIGKILL, OOM, crash).  Raised by the consumer promptly (the
+    liveness check runs every collect poll, not after ``ROUND_TIMEOUT_S``);
+    ``t_detected`` stamps the detection instant so recovery drills can
+    report detection→recovered latency."""
+
+    def __init__(self, msg: str):
+        super().__init__(msg)
+        self.t_detected = time.perf_counter()
+
+
 @dataclasses.dataclass
 class _Command:
     kind: str                 # "add" | "remove"
@@ -70,10 +82,16 @@ class _Command:
 @dataclasses.dataclass
 class _RoundRec:
     round_id: int
-    kind: str                 # "tick" | "reconfig" | "final"
+    kind: str                 # "tick" | "reconfig" | "final" | "snap"
     leaves: Tuple[int, ...]   # who must answer this round
     root_ops: Tuple = ()
     cmd: Optional[_Command] = None
+    # snap rounds only: the router-side cut captured at build time (the
+    # router runs ahead of the consumer, so consumer-side reads would race)
+    snap_tick: Optional[int] = None       # source ticks routed before cut
+    snap_frontier: Optional[np.ndarray] = None
+    snap_tuples_in: int = 0
+    snap_next_leaf_id: int = 0
 
 
 @dataclasses.dataclass
@@ -130,7 +148,8 @@ class IngestTier:
                  max_leaves: Optional[int] = None,
                  backend: Optional[str] = None, record: bool = False,
                  schedule=None, out_pad: int = MIN_PAD,
-                 root_device: bool = False, root_check_every: int = 8):
+                 root_device: bool = False, root_check_every: int = 8,
+                 snapshot_every: int = 0, restore: Optional[Dict] = None):
         assert worker in ("thread", "process", "inline"), worker
         assert n_leaves >= 1
         self.stream = stream
@@ -146,15 +165,37 @@ class IngestTier:
         self.out_pad = out_pad
         self.root_device = root_device
         self.root_check_every = root_check_every
-        self.part = SourcePartitioner(n_sources, range(n_leaves))
-        self.frontier = np.zeros((n_sources,), np.int64)
+        # snapshot_every=K inserts a barrier "snap" round after every K-th
+        # routed source tick: every leaf answers with its exported state at
+        # that exact boundary, so the assembled snapshot is consistent
+        # across the whole tier by construction (no leaf has seen tick K
+        # when it answers, every leaf has pushed tick K-1)
+        self.snapshot_every = snapshot_every
+        self._snapshots: Dict[int, Dict] = {}   # emitted_rounds -> payload
+        self._restore = restore
+        if restore is not None:
+            self.part = SourcePartitioner(n_sources, restore["leaves"])
+            self.part.assignment[:] = np.asarray(restore["assignment"],
+                                                 np.int64)
+            self.frontier = np.asarray(restore["frontier"],
+                                       np.int64).copy()
+            self._next_leaf_id = int(restore["next_leaf_id"])
+            self._tick_index = int(restore["source_ticks"])
+            self._rounds_emitted = int(restore["emitted_rounds"])
+            self.tuples_in = int(restore.get("tuples_in", 0))
+        else:
+            self.part = SourcePartitioner(n_sources, range(n_leaves))
+            self.frontier = np.zeros((n_sources,), np.int64)
+            self._next_leaf_id = n_leaves
+            self._tick_index = 0
+            self._rounds_emitted = 0
+            self.tuples_in = 0
+        self._last_snap_tick = self._tick_index
         self.emitted: Optional[List[T.TupleBatch]] = [] if record else None
 
         self._handles: Dict[int, _Handle] = {}
-        self._next_leaf_id = n_leaves
         self._cmds: List[_Command] = []
         self._cmd_lock = threading.Lock()
-        self._tick_index = 0
         self._round = 0
         self._stream_done = False
         self._flushed = False
@@ -165,7 +206,6 @@ class IngestTier:
         self._pw: Optional[int] = None
         self._ctx = None
         self.root: Optional[RootMerge] = None
-        self.tuples_in = 0
         self.attach_ms: List[float] = []
         self.detach_ms: List[float] = []
         # thread/process plumbing, created in _start()
@@ -219,37 +259,57 @@ class IngestTier:
         if first is not None:
             self._it = itertools.chain([first], self._it)
             self._kmax, self._pw = first.kmax, first.payload_width
+        elif self._restore is not None:
+            # empty replay suffix (the snapshot covered the whole stream):
+            # the gates still need their exact restored shapes to flush
+            self._stream_done = True
+            st = next(iter(self._restore["leaf_states"].values()))
+            self._kmax = int(st["stash"]["keys"].shape[1])
+            self._pw = int(st["stash"]["payload"].shape[1])
         else:
             self._stream_done = True
             self._kmax, self._pw = 1, 1
         if self.worker == "process":
             import multiprocessing as mp
             self._ctx = mp.get_context("spawn")
+        if self._restore is not None and self._kmax is not None:
+            # restore dimensions must match the snapshotted stream's (the
+            # RuntimeConfig in the manifest rebuilds an identical stack)
+            st = next(iter(self._restore["leaf_states"].values()))
+            want_kmax = st["stash"]["keys"].shape[1]
+            assert want_kmax == self._kmax, (want_kmax, self._kmax)
         self.root = RootMerge(self.max_leaves, self.root_cap, self._kmax,
                               self._pw, self.part.leaves,
                               backend=self.backend, out_pad=self.out_pad,
                               device=self.root_device,
                               check_every=self.root_check_every)
+        if self._restore is not None:
+            self.root.import_state(self._restore["root"])
         if self.worker != "inline":
             self._rounds = BoundedQueue(max(2 * self.chan_cap, 4))
             cap = max(4, (self.chan_cap + 2) * self.max_leaves)
             self._root_in = make_channel(self.worker, cap, self._ctx)
+        restore_states = ({} if self._restore is None
+                          else self._restore["leaf_states"])
         for leaf_id in self.part.leaves:
-            self._spawn(leaf_id, self.part.owned_mask(leaf_id))
+            self._spawn(leaf_id, self.part.owned_mask(leaf_id),
+                        state=restore_states.get(leaf_id))
         if self.worker != "inline":
             self._router = threading.Thread(target=self._route_loop,
                                             daemon=True)
             self._router.start()
 
-    def _spawn(self, leaf_id: int, owned: np.ndarray) -> None:
+    def _spawn(self, leaf_id: int, owned: np.ndarray,
+               state: Optional[Dict] = None) -> None:
         h = _Handle(leaf_id)
         if self.worker == "inline":
             h.gate = L.LeafGate(leaf_id, self.n_sources, owned,
                                 self.leaf_cap, self._kmax, self._pw,
-                                backend=self.backend)
+                                backend=self.backend, state=state)
         elif self.worker == "thread":
             gate = L.LeafGate(leaf_id, self.n_sources, owned, self.leaf_cap,
-                              self._kmax, self._pw, backend=self.backend)
+                              self._kmax, self._pw, backend=self.backend,
+                              state=state)
             h.chan = make_channel("thread", self.chan_cap)
             h.thread = threading.Thread(
                 target=L.run_gate_loop,
@@ -259,7 +319,7 @@ class IngestTier:
             cfg = dict(leaf_id=leaf_id, n_sources=self.n_sources,
                        owned=np.asarray(owned, bool), cap=self.leaf_cap,
                        kmax=self._kmax, payload_width=self._pw,
-                       backend=self.backend)
+                       backend=self.backend, state=state)
             h.chan = make_channel("process", self.chan_cap, self._ctx)
             h.proc = self._ctx.Process(
                 target=L.process_worker_main,
@@ -328,6 +388,24 @@ class IngestTier:
     def _build_next(self):
         """Next (rec, msgs_by_leaf), or None when the stream is fully
         routed and flushed."""
+        if (self.snapshot_every and not self._flushed
+                and self._tick_index > self._last_snap_tick
+                and self._tick_index % self.snapshot_every == 0):
+            # barrier snapshot round at the K-tick boundary, built BEFORE
+            # any due membership command so the captured cut excludes it
+            # (commands are controller intents, re-issued after a restore,
+            # not snapshotted state)
+            self._last_snap_tick = self._tick_index
+            with self._cmd_lock:
+                next_leaf_id = self._next_leaf_id
+            rec = _RoundRec(self._round, "snap", self.part.leaves,
+                            snap_tick=self._tick_index,
+                            snap_frontier=self.frontier.copy(),
+                            snap_tuples_in=self.tuples_in,
+                            snap_next_leaf_id=next_leaf_id)
+            msgs = {l: ("snap", self._round, None) for l in self.part.leaves}
+            self._round += 1
+            return rec, msgs
         cmd = self._pop_due_cmd()
         if cmd is not None:
             out = self._build_reconfig(cmd)
@@ -392,11 +470,19 @@ class IngestTier:
                 raise self._router_error
             out = self._root_in.get(timeout=1.0)
             if out is TIMEOUT:
+                missing = sorted(set(rec.leaves) - set(buf[rec.round_id]))
+                for l in missing:
+                    h = self._handles.get(l)
+                    if (h is not None and h.proc is not None
+                            and not h.proc.is_alive()):
+                        raise LeafFailure(
+                            f"ingest leaf {l} died (exit code "
+                            f"{h.proc.exitcode}) before answering round "
+                            f"{rec.round_id}")
                 if time.monotonic() > deadline:
                     raise RuntimeError(
                         f"ingest round {rec.round_id} timed out waiting "
-                        f"for leaves "
-                        f"{sorted(set(rec.leaves) - set(buf[rec.round_id]))}")
+                        f"for leaves {missing}")
                 continue
             buf[out.round_id][out.leaf_id] = out
         round_outs = buf.pop(rec.round_id)
@@ -410,12 +496,50 @@ class IngestTier:
             kind, r, payload = msgs[l]
             if kind == "tick":
                 outs.append(h.gate.push_round(r, payload))
+            elif kind == "snap":
+                outs.append(L.LeafSnap(l, r, h.gate.export_state()))
             else:
                 leaving = h.gate.apply(payload)
                 outs.append(h.gate.push_round(r, None, final=leaving))
                 if leaving:
                     del self._handles[l]
         return outs
+
+    # -- snapshots ------------------------------------------------------------
+    def _store_snapshot(self, rec: _RoundRec, snaps: List) -> None:
+        """Assemble the tier-wide cut: every leaf's state at the barrier,
+        the root gate (consumer-thread-owned, so between-rounds is safe),
+        and the router-side routing state captured when the snap round was
+        built.  Keyed by ``emitted_rounds`` — the number of merged rounds
+        the consumer (pipeline) has seen before this cut — which is what
+        aligns it with the runtime's tick ids."""
+        self._snapshots[self._rounds_emitted] = {
+            "leaves": [int(l) for l in rec.leaves],
+            "assignment": self.part.assignment.tolist(),
+            "next_leaf_id": int(rec.snap_next_leaf_id),
+            "frontier": np.asarray(rec.snap_frontier, np.int64),
+            "source_ticks": int(rec.snap_tick),
+            "emitted_rounds": int(self._rounds_emitted),
+            "tuples_in": int(rec.snap_tuples_in),
+            "leaf_states": {int(s.leaf_id): s.state for s in snaps},
+            "root": self.root.export_state(),
+        }
+
+    def pop_snapshot(self, emitted_rounds: int) -> Optional[Dict]:
+        """The snapshot whose cut sits exactly before merged round
+        ``emitted_rounds`` (and drop any older ones); None if not taken.
+        The consumer thread stores, any thread may pop — guarded by the
+        GIL-atomic dict ops plus the runtime's happens-before (the tier
+        always collects the snap round before yielding the next tick)."""
+        snap = self._snapshots.pop(emitted_rounds, None)
+        for k in [k for k in self._snapshots if k < emitted_rounds]:
+            self._snapshots.pop(k, None)
+        return snap
+
+    def latest_snapshot(self) -> Optional[Dict]:
+        if not self._snapshots:
+            return None
+        return self._snapshots[max(self._snapshots)]
 
     def __iter__(self):
         self._start()
@@ -435,6 +559,9 @@ class IngestTier:
                             raise self._router_error
                         break
                     outs = self._collect(rec)
+                if rec.kind == "snap":
+                    self._store_snapshot(rec, outs)
+                    continue               # snapshots merge nothing
                 self.root.apply_pre(rec.root_ops)
                 out = self.root.push(outs)
                 self.root.apply_post(rec.root_ops)
@@ -444,6 +571,7 @@ class IngestTier:
                      else self.detach_ms).append(lat)
                 if self.emitted is not None:
                     self.emitted.append(out)
+                self._rounds_emitted += 1
                 yield out
         finally:
             self._shutdown()

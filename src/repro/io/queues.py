@@ -73,6 +73,12 @@ class BoundedQueue:
         return len(self._items)
 
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
+        """Append ``item``, blocking while full.  ``close()`` from another
+        thread wakes a blocked put *immediately* (the wait predicate
+        includes the closed flag) and ``QueueClosed`` wins over
+        ``TimeoutError`` whenever the queue is closed — a producer stuck
+        behind a dead consumer unblocks the instant the tier tears the
+        queue down, instead of waiting out its timeout."""
         assert item is not None
         with self._cv:
             if len(self._items) >= self.cap:
@@ -80,6 +86,8 @@ class BoundedQueue:
                 if not self._cv.wait_for(
                         lambda: self._closed or len(self._items) < self.cap,
                         timeout=timeout):
+                    if self._closed:            # closed during the last slice
+                        raise QueueClosed
                     raise TimeoutError("BoundedQueue.put timed out")
             if self._closed:
                 raise QueueClosed

@@ -105,6 +105,14 @@ class ReplaySource:
     def __len__(self) -> int:
         return len(self.batches)
 
+    def from_tick(self, tick: int) -> "ReplaySource":
+        """The suffix stream starting at tick index ``tick`` — the restore
+        path replays exactly the ticks at or past the last snapshot's
+        frontier (exactly-once: everything before is already reflected in
+        the snapshot, everything after is regenerated)."""
+        return ReplaySource(self.batches[tick:], n_inputs=self.n_inputs,
+                            schedule=self.schedule)
+
 
 _FIELDS = ("tau", "keys", "payload", "source", "valid", "is_control",
            "ctrl_epoch")
@@ -120,12 +128,14 @@ def save_stream(path: str, batches: Sequence[T.TupleBatch], *,
     np.savez_compressed(path, n_inputs=np.int32(n_inputs), **arrays)
 
 
-def load_stream(path: str) -> ReplaySource:
+def load_stream(path: str, *, from_tick: int = 0) -> ReplaySource:
     """Load a stream saved by ``save_stream`` as a ``ReplaySource`` (event
-    times are whatever was recorded)."""
+    times are whatever was recorded).  ``from_tick`` skips the prefix a
+    snapshot already covers — the ``.npz`` record is the replay log the
+    exactly-once restore contract leans on."""
     with np.load(path) as z:
         n_inputs = int(z["n_inputs"])
-        fields = {f: z[f] for f in _FIELDS}
+        fields = {f: z[f][from_tick:] for f in _FIELDS}
     n_ticks = fields["tau"].shape[0]
     batches: List[T.TupleBatch] = []
     for t in range(n_ticks):

@@ -5,16 +5,25 @@ Demonstrates, end to end, on one host:
      zero state transfer) and the stream's outputs stay exactly correct;
   2. the serving slot pool scales replicas with zero KV movement while the
      SN baseline ships GBs (scaled down here);
-  3. a crash between checkpoints resumes from the last manifest.
+  3. a crash between checkpoints resumes from the last manifest
+     (storage-substrate level);
+  4. the full kill-and-restore loop: a checkpointing run dies mid-stream,
+     is rebuilt from the manifest-carried ``RuntimeConfig``, restores the
+     latest complete snapshot (a planted torn save is invisible), replays
+     the recorded stream from the snapshot frontier, and the merged output
+     multiset equals the uninterrupted oracle tuple for tuple —
+     detection→recovered latency is measured (``repro.launch.recovery``).
 
     PYTHONPATH=src python -m repro.launch.elastic_drill
+
+Pipelines, tiers, and runtimes are built through ``repro.api``
+(``RuntimeConfig`` + ``build_runtime``) — the same path the checkpoint
+manifests serialize.
 
 ``--mesh N`` additionally (or with ``--drills mesh``, exclusively) runs
 drill 1 on an N-device mesh: the epoch switch happens mid-stream on real
 devices, outputs stay identical to the single-device run, and the compiled
-step's HLO contains zero cross-device collectives — the measured
-cross-device state transfer is 0 bytes, vs the sigma bytes ``sn_transfer``
-would ship.  Emulate devices with
+step's HLO contains zero cross-device collectives.  Emulate devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
 ``--live`` (or ``--drills live``) runs the closed loop end to end: the
@@ -24,26 +33,27 @@ injected live through the control-tuple path, detection→switch latency is
 measured, and the output set must exactly match the static max-width
 oracle.
 
-``--drills ingest`` drills the hierarchical multi-host ScaleGate
-(repro.ingest): an ingest host joins mid-stream and another leaves, both
-with zero tuple-state transfer (ESG addSources/removeSources + Lemma-3
-gammas), attach/detach latency is measured, and the tier's merged output
-must exactly equal the single-ScaleGate oracle with total order and a
-monotone watermark.
+``--drills ingest`` drills the hierarchical multi-host ScaleGate: an
+ingest host joins mid-stream and another leaves, both with zero
+tuple-state transfer, attach/detach latency is measured, and the tier's
+merged output must exactly equal the single-ScaleGate oracle.
+
+``--drills recovery-kill`` runs drill 4 with real process-worker ingest
+leaves and a SIGKILL (unplanned host loss; slower — each leaf is a spawned
+process that initializes its own jax).
 """
 
 import argparse
+import dataclasses
 import sys
+import tempfile
 
 import numpy as np
 import jax
 
-from repro.core.aggregate import count_aggregate
+from repro import api
 from repro.core.controller import Reconfiguration, active_mask, balanced_fmu
 from repro.core.elastic import vsn_switch_bytes
-from repro.core.runtime import MeshPipeline, VSNPipeline
-from repro.core.windows import WindowSpec
-from repro.data import datagen
 
 
 def collect(outs):
@@ -56,15 +66,21 @@ def collect(outs):
     return sorted(res)
 
 
+def base_cfg(k: int) -> api.RuntimeConfig:
+    return api.RuntimeConfig(op="count", wa=50, ws=100, wt="multi",
+                             k_virt=k, out_cap=512, n_max=8, n_active=4,
+                             stash_cap=64)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", type=int, default=0,
                     help="also run the straggler drill on an N-device mesh")
     ap.add_argument("--live", action="store_true",
                     help="also run the closed-loop live-runtime drill")
-    ap.add_argument("--drills", default="straggler,serving,crash",
-                    help="comma list of "
-                         "straggler,mesh,live,ingest,serving,crash")
+    ap.add_argument("--drills", default="straggler,serving,crash,recovery",
+                    help="comma list of straggler,mesh,live,ingest,"
+                         "serving,crash,recovery,recovery-kill")
     args = ap.parse_args(argv)
     drills = {d.strip() for d in args.drills.split(",")}
     if args.mesh:
@@ -73,8 +89,7 @@ def main(argv=None):
         drills.add("live")
 
     k = 64
-    op = count_aggregate(WindowSpec(wa=50, ws=100, wt="multi"), k_virt=k,
-                         out_cap=512)
+    from repro.data import datagen
 
     def drain_reconfig():
         # instance 2 is slow: remap its keys to the others.  No
@@ -91,7 +106,7 @@ def main(argv=None):
                               vocab=500, k_virt=k, rate_per_tick=30)
 
     def run(drain_straggler: bool):
-        pipe = VSNPipeline(op, n_max=8, n_active=4, stash_cap=64)
+        pipe = api.make_pipeline(base_cfg(k))
         outs = []
         for i, b in enumerate(stream()):
             rc = drain_reconfig() if drain_straggler and i == 2 else None
@@ -118,9 +133,9 @@ def main(argv=None):
                   f"{len(jax.devices())} (set XLA_FLAGS="
                   f"--xla_force_host_platform_device_count={n})")
         else:
-            from repro.launch.mesh import make_stream_mesh
-            pipe = MeshPipeline(op, make_stream_mesh(n), stash_cap=64,
-                                mode="general", n_max=8, n_active=4)
+            # same config, mesh execution — the api picks MeshPipeline
+            pipe = api.make_pipeline(
+                dataclasses.replace(base_cfg(k), mesh_devices=n))
             outs = []
             for i, b in enumerate(stream()):
                 rc = drain_reconfig() if i == 2 else None
@@ -141,8 +156,7 @@ def main(argv=None):
 
     # --- live closed loop --------------------------------------------------
     if "live" in drills:
-        from repro.core.async_runtime import AsyncStreamRuntime, run_sync
-        from repro.core.controller import ThresholdController
+        from repro.core.async_runtime import run_sync
         from repro.io import RateSchedule, ReplaySource
 
         live_batches = list(datagen.tweets(
@@ -151,14 +165,14 @@ def main(argv=None):
         # offered-rate spike at tick 3 pushes load past the §8.4 upper
         # threshold: 2 instances x 2000 t/s capacity, 9000 t/s offered.
         sched = RateSchedule(((3, 1500.0), (5, 9000.0)))
-        ctl = ThresholdController(n_max=8, k_virt=k,
-                                  capacity_per_instance=2000.0, n_active=2)
-        live_pipe = VSNPipeline(op, n_max=8, n_active=2, stash_cap=128)
-        rt = AsyncStreamRuntime(live_pipe,
-                                ReplaySource(live_batches, schedule=sched),
-                                controller=ctl, queue_cap=3)
+        live_cfg = dataclasses.replace(
+            base_cfg(k), n_active=2, stash_cap=128, queue_cap=3,
+            controller="threshold", capacity_per_instance=2000.0)
+        rt = api.build_runtime(live_cfg,
+                               ReplaySource(live_batches, schedule=sched))
         rep = rt.run()
-        static = VSNPipeline(op, n_max=8, n_active=8, stash_cap=128)
+        static = api.make_pipeline(
+            dataclasses.replace(live_cfg, n_active=8))
         _, oracle_sink = run_sync(static, ReplaySource(live_batches))
         same = rt.sink.results() == oracle_sink.results()
         d2s = (f"{np.mean(rep.detect_to_switch_ms):.1f} ms / "
@@ -173,7 +187,7 @@ def main(argv=None):
 
     # --- hierarchical multi-host ingest ------------------------------------
     if "ingest" in drills:
-        from repro.ingest import (IngestTier, collect_tuples, emitted_taus,
+        from repro.ingest import (collect_tuples, emitted_taus,
                                   single_gate_stream)
 
         n_src, n_leaves = 6, 2
@@ -181,10 +195,12 @@ def main(argv=None):
             np.random.default_rng(5), n_ticks=10, tick=64,
             words_per_tweet=3, vocab=500, k_virt=k, rate_per_tick=40,
             n_sources=n_src))
+        tier_cfg = dataclasses.replace(
+            base_cfg(k), n_sources=n_src, ingest_hosts=n_leaves,
+            leaf_cap=64, root_cap=128)
 
         def ingest_run():
-            tier = IngestTier(ingest_batches, n_src, n_leaves,
-                              worker="thread", leaf_cap=64, root_cap=128)
+            tier = api.make_tier(tier_cfg, ingest_batches)
             new_leaf = tier.add_host(at_tick=3)  # host joins mid-stream
             tier.remove_host(0, at_tick=7)       # ...and one leaves
             return tier, new_leaf, list(tier)
@@ -228,18 +244,60 @@ def main(argv=None):
               f"SN baseline moved {s} B of KV")
         assert s > 10 * v
 
-    # --- crash/resume ------------------------------------------------------
+    # --- crash/resume (storage substrate) ----------------------------------
     if "crash" in drills:
-        import tempfile
+        import os
         from repro.checkpoint import checkpoint as C
         with tempfile.TemporaryDirectory() as d:
             C.save(d, 10, {"w": np.ones(4)}, async_=False)
-            import os
             os.makedirs(os.path.join(d, "step_00000011"))   # crashed save
             step = C.latest_step(d)
             print(f"[3] crash drill: latest complete step = {step} (11 is "
                   f"invisible)")
             assert step == 10
+
+    # --- kill-and-restore (full stack) --------------------------------------
+    if "recovery" in drills or "recovery-kill" in drills:
+        from repro.launch.recovery import kill_restore_drill
+
+        n_src = 4
+        rng = np.random.default_rng(7)
+        rec_batches = []
+        tau_base = 0
+        for _ in range(12):
+            (b,) = datagen.tweets(rng, n_ticks=1, tick=64,
+                                  words_per_tweet=3, vocab=500, k_virt=k,
+                                  rate_per_tick=30, n_sources=n_src)
+            b = dataclasses.replace(b, tau=b.tau + tau_base)
+            tau_base = int(np.asarray(b.tau).max()) + 1
+            rec_batches.append(b)
+
+        if "recovery" in drills:
+            with tempfile.TemporaryDirectory() as d:
+                cfg = dataclasses.replace(
+                    base_cfg(k), n_active=2, stash_cap=256,
+                    n_sources=n_src, ingest_hosts=2, leaf_cap=128,
+                    root_cap=256, checkpoint_dir=d, checkpoint_every=4)
+                rep = kill_restore_drill(cfg, rec_batches, mode="stop",
+                                         crash_after=7,
+                                         crash_mid_save=True)
+                print(f"[6] kill-and-restore ({rep.summary()}); torn save "
+                      f"was invisible, outputs exactly-once")
+                assert rep.parity, "recovery drill lost exactly-once parity"
+                assert rep.restored_step >= cfg.checkpoint_every
+
+        if "recovery-kill" in drills:
+            with tempfile.TemporaryDirectory() as d:
+                cfg = dataclasses.replace(
+                    base_cfg(k), n_active=2, stash_cap=256,
+                    n_sources=n_src, ingest_hosts=2,
+                    ingest_worker="process", chan_cap=2, leaf_cap=128,
+                    root_cap=256, checkpoint_dir=d, checkpoint_every=4)
+                rep = kill_restore_drill(cfg, rec_batches, mode="sigkill",
+                                         crash_after=6)
+                print(f"[6k] SIGKILL leaf restore ({rep.summary()})")
+                assert rep.parity, "sigkill drill lost exactly-once parity"
+
     print("elastic drill OK")
     return 0
 

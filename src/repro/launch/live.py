@@ -4,11 +4,12 @@
         --controller threshold --compare-sync --oracle
 
 Streams a Q1-style wordcount workload through ``AsyncStreamRuntime`` under
-an abruptly-changing offered-rate trace (the Q5 shape): the ingest thread
-stages tick T+1 while the device computes tick T, a ``MetricsBus`` feeds
-the controller every tick, and emitted reconfigurations are injected
-mid-stream through the control-tuple path.  Prints throughput, tick
-latency p50/p99, the reconfiguration trace, and detection→switch latency.
+an abruptly-changing offered-rate trace (the Q5 shape).  The whole stack —
+operator, pipeline (single device or mesh), optional multi-host ingest
+tier, controller, checkpointing — is assembled by ``repro.api``: the flags
+below populate one ``RuntimeConfig`` and ``build_runtime`` does the rest.
+Prints throughput, tick latency p50/p99, the reconfiguration trace, and
+detection→switch latency.
 
 * ``--compare-sync``  also runs the synchronous host-loop baseline on the
   same stream (replaying the async run's reconfiguration trace) and
@@ -25,18 +26,20 @@ latency p50/p99, the reconfiguration trace, and detection→switch latency.
 * ``--record F.npz`` / ``--replay F.npz`` save / replay the exact tick
   stream (event times intact) via ``io.sources``;
 * ``--super-batch K``  stages K consecutive ticks as one device-resident
-  stack and dispatches the persistent compiled K-tick scan
-  (``run_persistent_staged``) — one dispatch and one control-lane sync
-  per K ticks instead of per tick;
+  stack and dispatches the persistent compiled K-tick scan;
 * ``--fused-root``     (with ``--ingest-hosts``) runs the root merge on
-  device: one fused stacked-leaf kernel call per round, no per-round
-  host sync (``RootMerge(device=True)``);
+  device (``RootMerge(device=True)``);
 * ``--ingest-hosts N``  spreads the workload over N physical sources and
-  merges them through the hierarchical multi-host ScaleGate
-  (``repro.ingest.IngestTier``, one leaf gate per ingest host) upstream of
-  the runtime — the tier's totally-ordered ready stream is what
-  ``AsyncStreamRuntime`` stages, and its output set is asserted against
-  the single-ScaleGate oracle after the run.
+  merges them through the hierarchical multi-host ScaleGate upstream of
+  the runtime; the tier's output set is asserted against the
+  single-ScaleGate oracle after the run;
+* ``--checkpoint-dir D --checkpoint-every K``  takes an epoch-consistent
+  snapshot of the whole stack (pipeline sigma + ScaleGate + ingest tier)
+  every K ticks, asynchronously, with an atomic-manifest commit;
+* ``--resume``         (with ``--checkpoint-dir`` and ``--replay``)
+  restores the stack from the latest complete checkpoint and replays the
+  recorded stream from the snapshot's frontier — the kill-and-restore
+  loop ``repro.launch.recovery`` drills and measures.
 """
 
 import argparse
@@ -46,33 +49,15 @@ import sys
 import numpy as np
 import jax
 
-from repro.core.aggregate import count_aggregate
-from repro.core.async_runtime import AsyncStreamRuntime, run_sync
-from repro.core.controller import PredictiveController, ThresholdController
-from repro.io import CollectSink, NullSink
-from repro.core.runtime import MeshPipeline, VSNPipeline
-from repro.core.windows import WindowSpec
+from repro import api
+from repro.core.async_runtime import run_sync
 from repro.data import datagen
-from repro.io import (RateSchedule, ReplaySource, SyntheticSource,
-                      load_stream, save_stream)
+from repro.io import (CollectSink, NullSink, RateSchedule, ReplaySource,
+                      SyntheticSource, load_stream, save_stream)
 
 K_VIRT = 256
-WS = WindowSpec(wa=500, ws=1000, wt="multi")
 # Q5-style abrupt phases (tuples/s offered), cycled over the tick budget
 PHASES = (2000.0, 16000.0, 4000.0, 24000.0, 2500.0)
-
-
-def make_controller(kind: str, n_max: int):
-    if kind == "threshold":
-        return ThresholdController(n_max=n_max, k_virt=K_VIRT,
-                                   capacity_per_instance=4000.0, n_active=2)
-    if kind == "predictive":
-        return PredictiveController(n_max=n_max, k_virt=K_VIRT,
-                                    comparisons_per_s_per_instance=3e7,
-                                    ws_seconds=1.0, n_active=2)
-    if kind == "none":
-        return None
-    raise ValueError(kind)
 
 
 def make_stream(args):
@@ -105,17 +90,38 @@ def make_stream(args):
     return ReplaySource(batches, schedule=sched)
 
 
-def make_pipe(args, n_max, n_active):
-    n_inputs = max(getattr(args, "n_sources", args.ingest_hosts), 1)
-    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2,
-                         n_inputs=n_inputs)
-    stash = args.tick * 4 if args.ingest_hosts else args.tick
-    if args.mesh:
-        from repro.launch.mesh import make_stream_mesh
-        return MeshPipeline(op, make_stream_mesh(args.mesh), stash_cap=stash,
-                            mode="fast-agg", agg_kind="count",
-                            n_max=n_max, n_active=n_active)
-    return VSNPipeline(op, n_max=n_max, n_active=n_active, stash_cap=stash)
+def make_cfg(args, n_sources: int) -> api.RuntimeConfig:
+    """One declarative description of the run — every launcher knob lands
+    in the same ``RuntimeConfig`` the checkpoint manifest carries."""
+    return api.RuntimeConfig(
+        op="count", wa=500, ws=1000, wt="multi", k_virt=K_VIRT,
+        out_cap=1024, extra_slots=2,
+        n_max=args.n_max, n_active=2,
+        stash_cap=args.tick * 4 if args.ingest_hosts else args.tick,
+        mesh_devices=args.mesh,
+        n_sources=n_sources, ingest_hosts=args.ingest_hosts,
+        leaf_cap=args.tick, root_cap=2 * args.tick, out_pad=2 * args.tick,
+        root_device=args.fused_root,
+        queue_cap=args.queue_cap, super_batch=args.super_batch,
+        controller=args.controller,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
+
+
+class _Recording:
+    """Lazily tee the source (a --pace source must pace the *router*, not
+    a startup materialization) while keeping the raw ticks for the
+    post-run single-gate-oracle check."""
+
+    def __init__(self, src):
+        self.src = src
+        self.schedule = getattr(src, "schedule", None)
+        self.raw = []
+
+    def __iter__(self):
+        for b in self.src:
+            self.raw.append(b)
+            yield b
 
 
 def main(argv=None):
@@ -138,12 +144,18 @@ def main(argv=None):
                          "multi-host ScaleGate with N leaf gates")
     ap.add_argument("--super-batch", type=int, default=1,
                     help="stage K consecutive ticks as one device stack "
-                         "and run the persistent compiled K-tick scan "
-                         "(one dispatch + one control-lane sync per K)")
+                         "and run the persistent compiled K-tick scan")
     ap.add_argument("--fused-root", action="store_true",
                     help="with --ingest-hosts: run the root merge on "
-                         "device (one fused stacked-leaf kernel per round, "
-                         "no per-round host sync)")
+                         "device (one fused stacked-leaf kernel per round)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="take epoch-consistent snapshots into this dir")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="pipeline ticks between snapshots (0 = off)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from the latest complete checkpoint in "
+                         "--checkpoint-dir and replay --replay from the "
+                         "snapshot's frontier")
     args = ap.parse_args(argv)
 
     if args.mesh and len(jax.devices()) < args.mesh:
@@ -152,10 +164,18 @@ def main(argv=None):
               f"--xla_force_host_platform_device_count={args.mesh})")
         return 0
 
+    if args.resume:
+        assert args.checkpoint_dir, "--resume needs --checkpoint-dir"
+        assert args.replay, "--resume needs the --replay record to replay"
+        rt = api.resume_runtime(args.checkpoint_dir, args.replay)
+        report = rt.run()
+        print(f"[live/resume] restored step {rt.restored_step} from "
+              f"{args.checkpoint_dir}; {report.summary()}")
+        print("live resume OK")
+        return 0
+
     src = make_stream(args)
-    tier = None
     if args.ingest_hosts:
-        from repro.ingest import IngestTier
         if args.replay:
             # the recording fixes the source-id space; the tier must merge
             # whatever was recorded, not what --ingest-hosts assumes
@@ -164,42 +184,28 @@ def main(argv=None):
                 default=0)
         else:
             n_sources = args.ingest_hosts
-        args.n_sources = n_sources
-        raw_batches = []
-
-        def recording(stream):
-            # stream lazily (a --pace source must pace the *router*, not a
-            # startup materialization) while keeping the raw ticks for the
-            # post-run single-gate-oracle check
-            for b in stream:
-                raw_batches.append(b)
-                yield b
-
-        tier = IngestTier(recording(src), n_sources, args.ingest_hosts,
-                          worker="thread", leaf_cap=args.tick,
-                          root_cap=2 * args.tick, record=True,
-                          out_pad=2 * args.tick,
-                          root_device=args.fused_root,
-                          schedule=getattr(src, "schedule", None))
-        src = tier
-    ctl = make_controller(args.controller, args.n_max)
-    pipe = make_pipe(args, args.n_max, 2)
+        src = _Recording(src)
+    else:
+        n_sources = 1
+    cfg = make_cfg(args, n_sources)
     # CollectSink retains every tick's device outputs for the parity
     # checks; a pure throughput run must not grow memory with the stream
     need_outputs = args.compare_sync or args.oracle
     sink = CollectSink() if need_outputs else NullSink()
-    rt = AsyncStreamRuntime(pipe, src, sink=sink, controller=ctl,
-                            queue_cap=args.queue_cap,
-                            super_batch=args.super_batch)
+    rt = api.build_runtime(cfg, src, sink=sink,
+                           record_tier=bool(args.ingest_hosts))
     report = rt.run()
     print(f"[live/async] {report.summary()}")
-    if tier is not None:
+    if rt.checkpointer is not None:
+        print(f"[live/ckpt ] saved steps {rt.checkpointer.saved_steps} "
+              f"-> {cfg.checkpoint_dir} (resume with --resume)")
+    if rt.tier is not None:
         from repro.ingest import collect_tuples, single_gate_stream
-        st = tier.stats()
+        st = rt.tier.stats()
         print(f"[live/ingest] {st.summary()}")
-        oracle = single_gate_stream(raw_batches, args.n_sources,
+        oracle = single_gate_stream(src.raw, cfg.n_sources,
                                     cap=3 * args.tick)
-        assert (collect_tuples(tier.emitted) == collect_tuples(oracle)), \
+        assert (collect_tuples(rt.tier.emitted) == collect_tuples(oracle)), \
             "ingest tier diverged from the single-gate oracle"
         print(f"[live/ingest] tier output == single-ScaleGate oracle over "
               f"{st.tuples_out} tuples")
@@ -209,8 +215,9 @@ def main(argv=None):
         print(f"[live/async] reconfig trace: {trace}")
     if need_outputs:
         outs = rt.sink.results()
-        if tier is not None:
-            batches = list(tier.emitted)   # the merged stream the runtime saw
+        if rt.tier is not None:
+            batches = list(rt.tier.emitted)  # the merged stream the
+            #                                  runtime saw
         elif isinstance(src, ReplaySource):
             batches = list(src.batches)
         else:
@@ -218,7 +225,7 @@ def main(argv=None):
                 **{**vars(args), "pace": False, "record": None})))
 
     if args.compare_sync:
-        sync_pipe = make_pipe(args, args.n_max, 2)
+        sync_pipe = api.make_pipeline(cfg)
         sync_rep, sync_sink = run_sync(
             sync_pipe, ReplaySource(batches),
             reconfig_trace=report.reconfig_trace)
@@ -229,7 +236,8 @@ def main(argv=None):
         assert outs == sync_sink.results(), "async diverged from sync replay"
 
     if args.oracle:
-        static = make_pipe(args, args.n_max, args.n_max)
+        static = api.make_pipeline(
+            dataclasses.replace(cfg, n_active=args.n_max))
         _, oracle_sink = run_sync(static, ReplaySource(batches))
         ok = outs == oracle_sink.results()
         print(f"[live] outputs match static oracle = {ok} "

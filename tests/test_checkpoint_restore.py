@@ -1,0 +1,257 @@
+"""Epoch-consistent checkpoint/restore behind the runtime-config API
+(ISSUE 7 tentpole).
+
+Covers the contracts the recovery drills rely on, bottom-up:
+
+* ``RuntimeConfig`` — JSON round-trip (the manifest carries it so restore
+  rebuilds an *identical* stack), unknown-key tolerance on older
+  manifests, and the checkpoint/super-batch alignment guard;
+* ``Checkpointer`` — the atomic-manifest commit point (a torn save is
+  invisible to ``latest_step``), per-object pending state (concurrent
+  async saves from racing threads never cross-talk), shape-checked
+  restore;
+* full-runtime resume — single device and 8-way mesh (runtime-skipped
+  below 8 devices): kill at tick N, restore from the last complete step,
+  replay from the snapshot's frontier, committed+replayed == oracle
+  tuple for tuple;
+* the bounded-queue / mp-channel prompt-close contract that keeps a
+  restore from hanging behind a dead consumer's full channel.
+"""
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import Checkpointer
+from repro.data import datagen
+from repro.io.queues import BoundedQueue, QueueClosed
+
+K = 64
+
+
+def wordcount_stream(n_ticks=12, seed=2, tick=32, n_sources=1):
+    rng = np.random.default_rng(seed)
+    return list(datagen.tweets(rng, n_ticks=n_ticks, tick=tick,
+                               words_per_tweet=3, vocab=300, k_virt=K,
+                               rate_per_tick=30, n_sources=n_sources))
+
+
+def base_cfg(tmp, **over):
+    kw = dict(op="count", wa=50, ws=100, k_virt=K, out_cap=512,
+              n_max=8, n_active=4, stash_cap=64,
+              checkpoint_dir=str(tmp), checkpoint_every=4)
+    kw.update(over)
+    return api.RuntimeConfig(**kw)
+
+
+# ---------------------------------------------------------- RuntimeConfig --
+
+def test_runtime_config_json_roundtrip(tmp_path):
+    cfg = base_cfg(tmp_path, n_sources=4, ingest_hosts=2,
+                   ingest_worker="process", mesh_devices=0,
+                   super_batch=2, checkpoint_every=8)
+    blob = json.dumps(cfg.to_json())          # must be JSON-serializable
+    back = api.RuntimeConfig.from_json(json.loads(blob))
+    assert back == cfg
+
+
+def test_runtime_config_ignores_unknown_keys(tmp_path):
+    d = base_cfg(tmp_path).to_json()
+    d["some_future_field"] = 123              # older code, newer manifest
+    cfg = api.RuntimeConfig.from_json(d)
+    assert cfg.checkpoint_every == 4
+
+
+def test_runtime_config_checkpoint_super_batch_alignment(tmp_path):
+    with pytest.raises(AssertionError):
+        base_cfg(tmp_path, super_batch=3, checkpoint_every=4)
+    base_cfg(tmp_path, super_batch=2, checkpoint_every=4)  # aligned: fine
+
+
+# ----------------------------------------------------------- Checkpointer --
+
+def test_torn_save_invisible_to_latest_step(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": np.arange(6, dtype=np.int64).reshape(2, 3)}
+    ck.save(4, tree, async_=False, extra={"step": 4})
+    # a save torn mid-write: arrays on disk, no manifest
+    torn = os.path.join(str(tmp_path), "step_00000008")
+    os.makedirs(torn)
+    np.save(os.path.join(torn, "leaf_00000.npy"), np.zeros(3))
+    assert ck.latest_step() == 4
+    step, got = ck.restore_latest({"a": np.zeros((2, 3), np.int64)})
+    assert step == 4
+    np.testing.assert_array_equal(got["a"], tree["a"])
+
+
+def test_async_saves_from_racing_threads(tmp_path):
+    """Per-object pending bookkeeping: N threads each drive their own
+    async save stream into the same Checkpointer; wait() must block until
+    every write landed and every step must restore bit-exact."""
+    ck = Checkpointer(str(tmp_path))
+    steps = list(range(1, 9))
+
+    def _save(s):
+        ck.save(s, {"x": np.full((4,), s, np.int64)}, async_=True,
+                extra={"step": s})
+
+    ths = [threading.Thread(target=_save, args=(s,)) for s in steps]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    ck.wait()
+    assert ck.latest_step() == 8
+    for s in steps:
+        got = ck.restore(s, {"x": np.zeros((4,), np.int64)})
+        assert (got["x"] == s).all()
+        assert ck.manifest(s)["extra"]["step"] == s
+
+
+def test_manifest_carries_runtime_config(tmp_path):
+    """The commit record is self-describing: restore rebuilds the stack
+    from the manifest's RuntimeConfig, not from the caller's flags."""
+    from repro.io import ReplaySource
+    cfg = base_cfg(tmp_path)
+    batches = wordcount_stream(n_ticks=8)
+    rt = api.build_runtime(cfg, ReplaySource(batches))
+    rt.run()
+    rt.checkpointer.wait()
+    ck = Checkpointer(str(tmp_path))
+    step = ck.latest_step()
+    assert step is not None and step % cfg.checkpoint_every == 0
+    extra = ck.manifest(step)["extra"]
+    assert api.RuntimeConfig.from_json(extra["config"]) == cfg
+    assert extra["step"] == step
+    assert 0 <= extra["source_ticks"] <= len(batches)
+
+
+# ---------------------------------------------------- full-runtime resume --
+
+def test_resume_single_device_exactly_once(tmp_path):
+    from repro.launch.recovery import kill_restore_drill
+    cfg = base_cfg(tmp_path)
+    batches = wordcount_stream(n_ticks=12, seed=13)
+    rep = kill_restore_drill(cfg, batches, mode="stop", crash_after=7,
+                             crash_mid_save=True)
+    assert rep.parity, rep.summary()
+    assert rep.restored_step == 4        # torn step-8 dir skipped
+    assert rep.n_committed + rep.n_replayed == rep.n_oracle
+
+
+def test_resume_after_stream_end_flush_only(tmp_path):
+    """A tier snapshot can land on the final flush round, covering the
+    *whole* recorded stream: resume then has an empty replay suffix and
+    must still rebuild the gates at their exact restored shapes and flush
+    without new input."""
+    from repro.io import ReplaySource
+    cfg = base_cfg(tmp_path, n_sources=4, ingest_hosts=2,
+                   leaf_cap=32, root_cap=64, checkpoint_every=4)
+    batches = wordcount_stream(n_ticks=8, seed=17, n_sources=4)
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=4))
+    rt.run()
+    rt.checkpointer.wait()
+    saved = rt.checkpointer.saved_steps
+    assert saved, "no snapshot landed"
+    resumed = api.resume_runtime(str(tmp_path), batches)
+    resumed.run()
+    assert resumed.restored_step == max(saved)
+    # committed-below-S plus replayed-from-S must equal the full run
+    committed = rt.sink.results(before_tick=resumed.restored_step)
+    oracle = rt.sink.results()
+    assert sorted(committed + resumed.sink.results()) == sorted(oracle)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_resume_mesh8_exactly_once(tmp_path):
+    """Same kill-and-restore contract with the key-block-sharded sigma on
+    an 8-way mesh: the snapshot must be consistent across every shard and
+    the rebuilt mesh stack must replay to exact parity."""
+    from repro.launch.recovery import kill_restore_drill
+    cfg = base_cfg(tmp_path, mesh_devices=8, n_max=8, n_active=8)
+    batches = wordcount_stream(n_ticks=12, seed=19)
+    rep = kill_restore_drill(cfg, batches, mode="stop", crash_after=7,
+                             crash_mid_save=True)
+    assert rep.parity, rep.summary()
+    assert rep.restored_step == 4
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_resume_mesh8_with_ingest_tier(tmp_path):
+    """Mesh pipeline fed by the hierarchical multi-host tier: one snapshot
+    covers ingest stash + watermark + sharded sigma consistently."""
+    from repro.launch.recovery import kill_restore_drill
+    cfg = base_cfg(tmp_path, mesh_devices=8, n_max=8, n_active=8,
+                   n_sources=4, ingest_hosts=2, leaf_cap=32, root_cap=64)
+    batches = wordcount_stream(n_ticks=12, seed=29, n_sources=4)
+    rep = kill_restore_drill(cfg, batches, mode="stop", crash_after=6,
+                             crash_mid_save=False)
+    assert rep.parity, rep.summary()
+    assert rep.restored_step >= cfg.checkpoint_every
+
+
+# ------------------------------------------------- prompt-close contracts --
+
+def test_bounded_queue_close_unblocks_put():
+    """close() during a blocked put raises QueueClosed immediately — not
+    after the put's timeout — so teardown never hangs behind a full
+    queue whose consumer died."""
+    q = BoundedQueue(1)
+    q.put("a")
+    err, done = [], threading.Event()
+
+    def _blocked_put():
+        t0 = time.perf_counter()
+        try:
+            q.put("b", timeout=30.0)
+        except QueueClosed:
+            err.append(time.perf_counter() - t0)
+        done.set()
+
+    th = threading.Thread(target=_blocked_put)
+    th.start()
+    time.sleep(0.1)                  # let the put block on the full queue
+    q.close()
+    assert done.wait(timeout=5.0)
+    th.join()
+    assert err and err[0] < 5.0, "put waited out its timeout past close()"
+    assert q.get() == "a"            # enqueued-before-close still delivered
+    with pytest.raises(QueueClosed):
+        q.get()
+
+
+def test_mp_channel_close_unblocks_put():
+    """The process-transport adapter honors the same contract within its
+    poll granularity: a put blocked on a full mp queue observes close()
+    promptly instead of waiting out a long timeout."""
+    import multiprocessing as mp
+    from repro.ingest.channels import MpChannel
+    ch = MpChannel(mp.get_context("spawn"), cap=1)
+    ch.put("a")
+    err, done = [], threading.Event()
+
+    def _blocked_put():
+        t0 = time.perf_counter()
+        try:
+            ch.put("b", timeout=30.0)
+        except QueueClosed:
+            err.append(time.perf_counter() - t0)
+        done.set()
+
+    th = threading.Thread(target=_blocked_put)
+    th.start()
+    time.sleep(0.2)
+    ch.close()
+    assert done.wait(timeout=5.0)
+    th.join()
+    assert err and err[0] < 5.0, "mp put ignored close()"

@@ -159,6 +159,50 @@ def test_chaos_join_stream_parity():
     assert collect_tuples(outs) == collect_tuples(oracle)
 
 
+# ------------------------------------- kill-and-restore drills (ISSUE 7) --
+
+def recovery_cfg(tmp, **over):
+    from repro import api
+    kw = dict(op="count", wa=50, ws=100, k_virt=K, out_cap=512,
+              n_max=8, n_active=4, stash_cap=64,
+              n_sources=N_SRC, ingest_hosts=2, leaf_cap=32, root_cap=64,
+              checkpoint_dir=str(tmp), checkpoint_every=4)
+    kw.update(over)
+    return api.RuntimeConfig(**kw)
+
+
+def test_recovery_sigkill_leaf_mid_backpressure(tmp_path):
+    """Unplanned host loss under congestion: a *process*-worker ingest
+    leaf is SIGKILLed while every channel is full (chan_cap=1), plus a
+    torn save planted on disk — the restore must come from the latest
+    *complete* manifest and the committed+replayed output multiset must
+    equal the uninterrupted oracle's, tuple for tuple (exactly-once)."""
+    from repro.launch.recovery import kill_restore_drill
+    batches = agg_stream(n_ticks=12, seed=21)
+    cfg = recovery_cfg(tmp_path, ingest_worker="process", chan_cap=1)
+    rep = kill_restore_drill(cfg, batches, mode="sigkill", crash_after=6,
+                             crash_mid_save=True)
+    assert rep.parity, rep.summary()
+    assert rep.restored_step >= cfg.checkpoint_every
+    assert rep.restored_step % cfg.checkpoint_every == 0
+    assert rep.detect_to_recover_ms > 0
+
+
+def test_recovery_stop_crash_mid_save_join_stream(tmp_path):
+    """The q3-style two-stream workload through the full stack (tier +
+    pipeline + checkpoints, thread workers): crash after 7 ticks with a
+    torn newer save on disk; restore falls back to the previous complete
+    step and replay closes the gap exactly."""
+    from repro.launch.recovery import kill_restore_drill
+    batches = join_stream(n_ticks=12, seed=23)
+    cfg = recovery_cfg(tmp_path, k_virt=1, n_sources=2)
+    rep = kill_restore_drill(cfg, batches, mode="stop", crash_after=7,
+                             crash_mid_save=True)
+    assert rep.parity, rep.summary()
+    assert rep.restored_step == 4    # torn step-8 dir must be invisible
+    assert rep.n_committed + rep.n_replayed == rep.n_oracle
+
+
 # ------------------------------------------------------------ soak @slow --
 
 @pytest.mark.slow
