@@ -295,6 +295,54 @@ def run_recovery_bench(name: str, cfg, batches, *, mode: str = "stop",
     return rep
 
 
+def run_obs_overhead_bench(make_pipe, make_source, warm, *,
+                           queue_cap: int = 4, reps: int = 3):
+    """Observability cost gate: the identical async run under three obs
+    settings — fully off (baseline), metrics+flight with tracing disabled
+    (the always-on tier, gated <2%), and full span tracing (gated <10%).
+
+    Each variant gets a fresh pipeline compiled outside the timed window
+    (``pipe.step(warm)``) and ``reps`` full runs; best-of throughput is
+    compared (single-core scheduler noise makes means unstable).  The
+    previously installed global ``Obs`` is restored afterwards, whatever
+    happens — the bench must not leave its instrumentation behind.
+
+    Returns base/metrics/trace tps, the two relative overheads, and
+    ``parity`` (exact output-set equality across all three variants — obs
+    must never perturb results)."""
+    from repro import obs
+    from repro.core.async_runtime import AsyncStreamRuntime
+
+    prev = obs.get()
+    tps, results = {}, {}
+    try:
+        for name, cfg in (
+                ("off", None),
+                ("metrics", obs.ObsConfig(enabled=True, trace=False)),
+                ("trace", obs.ObsConfig(enabled=True, trace=True))):
+            obs.set_current(obs.Obs(cfg) if cfg is not None else None)
+            best = 0.0
+            for _ in range(reps):
+                pipe = make_pipe()
+                pipe.step(warm)               # compile outside the window
+                rt = AsyncStreamRuntime(pipe, make_source(),
+                                        queue_cap=queue_cap)
+                rep = rt.run()
+                best = max(best, rep.throughput_tps)
+            tps[name] = best
+            results[name] = rt.sink.results()
+    finally:
+        obs.set_current(prev)
+    base = max(tps["off"], 1e-9)
+    return dict(
+        base_tps=tps["off"], metrics_tps=tps["metrics"],
+        trace_tps=tps["trace"],
+        metrics_overhead=1.0 - tps["metrics"] / base,
+        trace_overhead=1.0 - tps["trace"] / base,
+        parity=(results["off"] == results["metrics"]
+                == results["trace"]))
+
+
 def time_fn(fn, *args, warmup=2, iters=5):
     for _ in range(warmup):
         out = fn(*args)

@@ -177,6 +177,45 @@ def run_async(wc_mode: str, pair_dist: int, n_ticks: int = 32):
     return rep_a, rep_s, ok
 
 
+def run_obs_overhead(wc_mode: str, pair_dist: int, n_ticks: int = 32):
+    """Observability overhead on the q1 async run: obs off vs metrics-only
+    (tracing disabled) vs full tracing, best-of-reps, output parity
+    required.  The gates — disabled <2%, enabled <10% — are the PR's
+    'near-free when off' contract."""
+    from benchmarks.common import run_obs_overhead_bench
+    from repro.io import SyntheticSource
+
+    op = count_aggregate(WS, k_virt=K_VIRT, out_cap=1024, extra_slots=2)
+
+    def gen():
+        rng = np.random.default_rng(7)
+        return datagen.tweets(rng, n_ticks=n_ticks, tick=TICK,
+                              words_per_tweet=6, vocab=5000, k_virt=K_VIRT,
+                              mode=wc_mode, pair_dist=pair_dist,
+                              rate_per_tick=50)
+
+    warm = next(iter(gen()))
+    return run_obs_overhead_bench(lambda: make_fast_pipe(op),
+                                  lambda: SyntheticSource(gen()), warm)
+
+
+def emit_obs_overhead(qname: str, ob):
+    """The gated obs-overhead row: FAIL when the tracing-disabled tier
+    costs >=2%, full tracing costs >=10%, or any variant's outputs
+    diverge (parity=False trips ``failed_rows`` by itself)."""
+    fail = ""
+    if ob["metrics_overhead"] >= 0.02:
+        fail += " FAIL(disabled_overhead>=2%)"
+    if ob["trace_overhead"] >= 0.10:
+        fail += " FAIL(trace_overhead>=10%)"
+    emit(f"{qname}_obs_overhead",
+         1e6 / max(ob["trace_tps"], 1e-9),
+         f"obs off {ob['base_tps']:.0f} t/s; tracing-disabled "
+         f"{ob['metrics_overhead'] * 100:+.1f}% (gate <2%), full trace "
+         f"{ob['trace_overhead'] * 100:+.1f}% (gate <10%), "
+         f"parity={ob['parity']}{fail}")
+
+
 def run_device_resident(n_hosts: int, n_ticks: int = 96, tick: int = 16,
                         super_batch: int = 8):
     """Device-resident hot path (fused device root merge + persistent
@@ -264,6 +303,7 @@ def main(mesh: int = 0, async_: bool = False, ingest_hosts: int = 0):
              f"{rep_s.throughput_tps:.0f} t/s sync host loop "
              f"(overlap {gain:.2f}x), outputs_match_sync={ok}",
              p50_ms=rep_a.p50_ms, p99_ms=rep_a.p99_ms)
+        emit_obs_overhead("q1_wordcount", run_obs_overhead("wordcount", 0))
     if mesh:
         if len(jax.devices()) < mesh:
             emit("q1_mesh_SKIP", 0.0,

@@ -55,7 +55,19 @@ def main(argv=None) -> None:
                          "perf-trajectory artifact per q-module into this "
                          "directory (run config + that module's rows; "
                          "q1_wordcount -> BENCH_q1.json)")
+    ap.add_argument("--obs-export", default=None, metavar="DIR",
+                    help="install the observability layer (metrics + "
+                         "flight recorder + tracing) for the whole bench "
+                         "run and export metrics.json/metrics.prom/"
+                         "flight.json into DIR at the end — informational "
+                         "(instrumentation is live, so rows are not "
+                         "comparable to an uninstrumented run)")
     args = ap.parse_args(argv)
+
+    if args.obs_export:
+        from repro import obs as _obs
+        _obs.install(_obs.ObsConfig(enabled=True, trace=True,
+                                    export_dir=args.obs_export))
 
     from repro.kernels import dispatch
     dispatch.set_default_backend(args.backend)
@@ -111,6 +123,12 @@ def main(argv=None) -> None:
             path = os.path.join(args.bench_dir, f"BENCH_{short}.json")
             common.write_bench_json(path, name, common.ROWS[lo:hi], config)
             print(f"# wrote {path}", flush=True)
+    if args.obs_export:
+        from repro import obs as _obs
+        o = _obs.get()
+        if o is not None:
+            paths = o.export(args.obs_export)
+            print(f"# obs export: {sorted(paths.values())}", flush=True)
     if bad:
         print(f"# {len(bad)} FAIL row(s):", file=sys.stderr)
         for name, _, derived in bad:

@@ -25,11 +25,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional
 
+from repro import obs as _obs
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.checkpoint import stream as ckstream
 from repro.core.async_runtime import AsyncStreamRuntime, RunReport
 from repro.core.windows import WindowSpec
 from repro.io.sources import ReplaySource
+from repro.obs import ObsConfig
 
 
 @dataclasses.dataclass
@@ -69,12 +71,17 @@ class RuntimeConfig:
     # -- fault tolerance ---------------------------------------------------
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0      # pipeline ticks between snapshots
+    # -- observability -----------------------------------------------------
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     def __post_init__(self):
         if self.checkpoint_every and self.super_batch > 1:
             assert self.checkpoint_every % self.super_batch == 0, (
                 "checkpoint_every must be a multiple of super_batch: "
                 "boundaries inside a super-batch group are never cut")
+        # JSON round-trips (manifest restore) hand obs back as a plain dict
+        if isinstance(self.obs, dict):
+            self.obs = ObsConfig.from_dict(self.obs)
 
     @property
     def effective_max_leaves(self) -> int:
@@ -170,7 +177,11 @@ class Runtime:
         return self.runtime.sink
 
     def run(self, max_ticks: Optional[int] = None) -> RunReport:
-        return self.runtime.run(max_ticks=max_ticks)
+        report = self.runtime.run(max_ticks=max_ticks)
+        o = _obs.get()
+        if o is not None and self.config.obs.export_dir:
+            o.export(self.config.obs.export_dir)
+        return report
 
 
 def build_runtime(cfg: RuntimeConfig, source, *, pipeline=None, sink=None,
@@ -182,6 +193,12 @@ def build_runtime(cfg: RuntimeConfig, source, *, pipeline=None, sink=None,
     seeds its epoch shadows and host frontier from the pipeline at
     construction, so ordering is part of the contract, not an accident.
     """
+    # observability first: the layers built below record into the global
+    # Obs from their constructors onward.  Only install when the config
+    # asks for it — callers that installed an Obs themselves (benches,
+    # tests) keep theirs.
+    if cfg.obs.enabled:
+        _obs.install(cfg.obs)
     if pipeline is None:
         pipeline = make_pipeline(cfg)
     if restore is not None:

@@ -76,7 +76,9 @@ class StreamCheckpointer:
                   and next_tick % self.every == 0):
             return None
         # host copy NOW: the dispatch right after this call donates sg/sigma
-        pipe_np = jax.tree.map(np.asarray, self.pipeline.export_state())
+        from repro import obs as _obs
+        with _obs.span("checkpoint.capture"):
+            pipe_np = jax.tree.map(np.asarray, self.pipeline.export_state())
         tree: Dict[str, Any] = {"pipe": pipe_np}
         stash = pipe_np["sg"].stash
         extra: Dict[str, Any] = {
@@ -108,6 +110,9 @@ class StreamCheckpointer:
             }
         self.ckpt.save(int(next_tick), tree, async_=True, extra=extra)
         self.saved_steps.append(int(next_tick))
+        _obs.event("checkpoint", step=int(next_tick),
+                   tiered=tier_snap is not None)
+        _obs.counter_inc("checkpoint.saves")
         return int(next_tick)
 
     def wait(self) -> None:

@@ -38,6 +38,7 @@ from typing import Any, List, Optional, Tuple
 import numpy as np
 import jax
 
+from repro import obs as _obs
 from repro.core import tuples as T
 from repro.core.controller import Reconfiguration
 from repro.core.runtime import fold_frontier
@@ -86,6 +87,11 @@ class RunReport:
     switches: int
     detect_to_switch_ms: List[float]
     detect_to_switch_ticks: List[int]
+    # detections whose switch never committed (flushed at stop())
+    unresolved_detections: int = 0
+    # per-stage latency breakdown {stage: {p50,p90,p99,mean,count}} in ms,
+    # from span tracing when enabled (empty otherwise)
+    stage_latency_ms: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         d2s = (f"{np.mean(self.detect_to_switch_ms):.1f}ms"
@@ -115,8 +121,9 @@ def make_report(metrics: MetricsBus, reconfig_trace, switches: int,
     """Assemble the RunReport from a finished run's metrics (shared by the
     async loop and the run_sync baseline)."""
     p50, p99 = metrics.latency_quantiles_ms()
+    o = _obs.get()
     return RunReport(
-        ticks=len(metrics.records),
+        ticks=metrics.n_ticks,
         tuples=metrics.total_tuples,
         wall_s=(metrics.t_end or 0.0) - (metrics.t_start or 0.0),
         throughput_tps=metrics.throughput_tps(),
@@ -126,7 +133,10 @@ def make_report(metrics: MetricsBus, reconfig_trace, switches: int,
         reconfig_trace=list(reconfig_trace),
         switches=switches,
         detect_to_switch_ms=list(metrics.detect_to_switch_ms),
-        detect_to_switch_ticks=list(metrics.detect_to_switch_ticks))
+        detect_to_switch_ticks=list(metrics.detect_to_switch_ticks),
+        unresolved_detections=len(metrics.unresolved_detections),
+        stage_latency_ms=({} if o is None or not o.tracer.enabled
+                          else o.tracer.stage_latency_ms()))
 
 
 def tick_meta(b: T.TupleBatch, tick_id: int, n_inputs: int, k_virt: int,
@@ -213,12 +223,15 @@ class AsyncStreamRuntime:
                 for i, b in enumerate(self.source):
                     if max_ticks is not None and i >= max_ticks:
                         break
-                    meta = tick_meta(b, self.tick0 + i, n_inputs, k_virt,
-                                     frontier, with_hist=with_hist)
-                    staged = self.pipeline.stage(b)   # async transfer
+                    with _obs.span("ingest.stage"):
+                        meta = tick_meta(b, self.tick0 + i, n_inputs,
+                                         k_virt, frontier,
+                                         with_hist=with_hist)
+                        staged = self.pipeline.stage(b)   # async transfer
                     self.queue.put(StagedTick(meta, staged))
         except BaseException as e:              # surfaced after join()
             self._ingest_error = e
+            _obs.event("ingest_error", error=repr(e))
         finally:
             self.queue.close()
 
@@ -239,9 +252,10 @@ class AsyncStreamRuntime:
                 return
             n_pad = K - len(group)
             b0 = group[0]
-            ticks = group + [T.empty_batch(b0.batch, b0.kmax,
-                                           b0.payload_width)] * n_pad
-            stack = self.pipeline.stage_super(ticks)    # async transfer
+            with _obs.span("ingest.stage"):
+                ticks = group + [T.empty_batch(b0.batch, b0.kmax,
+                                               b0.payload_width)] * n_pad
+                stack = self.pipeline.stage_super(ticks)   # async transfer
             self.queue.put(StagedSuper(metas=metas, stack=stack,
                                        n_pad=n_pad))
             group, metas = [], []
@@ -287,10 +301,15 @@ class AsyncStreamRuntime:
         tick — is subtracted so a paced/starved source does not inflate the
         reported tick latency."""
         tick_id, switched, inst_load, meta, t_dispatch = pending
-        sw = bool(np.asarray(switched))
-        load = (np.asarray(inst_load) if inst_load is not None
-                else self._host_inst_load(meta.key_hist))
+        with _obs.span("runtime.drain"):
+            sw = bool(np.asarray(switched))
+            load = (np.asarray(inst_load) if inst_load is not None
+                    else self._host_inst_load(meta.key_hist))
         latency = max(time.perf_counter() - t_dispatch - idle_s, 0.0)
+        _obs.event("tick", tick_id=tick_id, n_tuples=meta.n_tuples,
+                   latency_ms=latency * 1e3, queue_depth=self.queue.depth,
+                   queue_high_water=self.queue.high_water, switched=sw,
+                   wmark_frontier=meta.frontier_before.tolist())
         # record BEFORE updating the shadows: this tick's load was measured
         # under the pre-switch tables, and the (inst_load, n_active) pair
         # must stay consistent or the controller reads phantom skew.
@@ -306,6 +325,8 @@ class AsyncStreamRuntime:
                 rc = resolved[-1]
                 self._fmu_shadow = np.asarray(rc.fmu).copy()
                 self._active_shadow = np.asarray(rc.active).copy()
+                _obs.event("switch", tick_id=tick_id, epoch=int(rc.epoch),
+                           n_active=int(self._active_shadow.sum()))
 
     def _decide(self, meta: TickMeta) -> Optional[Reconfiguration]:
         if self.controller is None:
@@ -319,7 +340,8 @@ class AsyncStreamRuntime:
         snap = self.metrics.snapshot(
             rate_hint=hint, queue_depth=self.queue.depth,
             backlog_tuples=float(self.queue.depth * meta.n_tuples))
-        return self.controller.observe_live(snap)
+        with _obs.span("controller.decide"):
+            return self.controller.observe_live(snap)
 
     # -- the loop -----------------------------------------------------------
     def run(self, max_ticks: Optional[int] = None) -> RunReport:
@@ -345,26 +367,32 @@ class AsyncStreamRuntime:
                     # every tick < meta.tick_id and nothing of this one;
                     # capture is synchronous-to-host (the dispatch below
                     # donates sg/sigma), the disk write is async
-                    self.checkpointer.maybe_save(meta.tick_id,
-                                                 meta.frontier_before)
+                    with _obs.span("runtime.checkpoint"):
+                        self.checkpointer.maybe_save(meta.tick_id,
+                                                     meta.frontier_before)
                 rc = self._decide(meta)
                 t0 = time.perf_counter()
-                if isinstance(item, StagedSuper):
-                    out = self.pipeline.run_persistent_staged(
-                        item.stack, reconfig=rc, reconfig_at=0,
-                        frontier=meta.frontier_before)
-                    o1, o2 = out.outs_pre, out.outs_post
-                    switched = out.switched.any()
-                    inst_load = (None if out.inst_load is None
-                                 else out.inst_load.sum(axis=0))
-                else:
-                    o1, o2, switched, inst_load = self.pipeline.step_staged(
-                        item.staged, reconfig=rc,
-                        frontier=meta.frontier_before)
+                with _obs.span("runtime.dispatch"):
+                    if isinstance(item, StagedSuper):
+                        out = self.pipeline.run_persistent_staged(
+                            item.stack, reconfig=rc, reconfig_at=0,
+                            frontier=meta.frontier_before)
+                        o1, o2 = out.outs_pre, out.outs_post
+                        switched = out.switched.any()
+                        inst_load = (None if out.inst_load is None
+                                     else out.inst_load.sum(axis=0))
+                    else:
+                        o1, o2, switched, inst_load = \
+                            self.pipeline.step_staged(
+                                item.staged, reconfig=rc,
+                                frontier=meta.frontier_before)
                 if rc is not None:
                     self.reconfig_trace.append((meta.tick_id, rc))
                     self.metrics.record_detection(rc.epoch,
                                                   meta.tick_id, rc)
+                    _obs.event("reconfig", tick_id=meta.tick_id,
+                               epoch=int(rc.epoch),
+                               n_active=int(np.asarray(rc.active).sum()))
                 self.sink.accept(meta.tick_id, o1, o2)
                 if pending is not None:
                     # tick T-1 syncs while T computes; the wait for T's
@@ -373,6 +401,15 @@ class AsyncStreamRuntime:
                 pending = (meta.tick_id, switched, inst_load, meta, t0)
             if pending is not None:
                 self._drain(pending)
+        except BaseException as e:
+            # failures come with a timeline, not just a stack trace: stamp
+            # the crash into the ring and dump it (when a dump_dir is
+            # configured) before unwinding
+            _obs.event("runtime_crash", error=repr(e))
+            o = _obs.get()
+            if o is not None:
+                o.dump_flight(reason=f"runtime_crash: {e!r}")
+            raise
         finally:
             # on error the ingest thread may be parked in put(); closing
             # the queue releases it so nothing (thread or staged device
@@ -383,6 +420,10 @@ class AsyncStreamRuntime:
             if self.checkpointer is not None:
                 self.checkpointer.wait()   # never exit with a torn save
         if self._ingest_error is not None:
+            o = _obs.get()
+            if o is not None:
+                o.dump_flight(
+                    reason=f"ingest_error: {self._ingest_error!r}")
             raise self._ingest_error
         return make_report(self.metrics, self.reconfig_trace, self.switches,
                            queue=self.queue)

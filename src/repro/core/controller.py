@@ -117,7 +117,14 @@ class ThresholdController:
         # (a pending switch), and mixing the two inflates skew and cascades
         # spurious scale-ups under a steady rate.
         skew = m.load_skew(m.n_active_observed or None)
-        return self.observe(m.rate_tps * skew * pressure)
+        rc = self.observe(m.rate_tps * skew * pressure)
+        if rc is not None:
+            from repro import obs as _obs
+            _obs.event("controller_decide", policy="threshold",
+                       rate_tps=m.rate_tps, skew=skew, pressure=pressure,
+                       queue_depth=m.queue_depth, epoch=int(rc.epoch),
+                       n_active=int(rc.n_active))
+        return rc
 
 
 @dataclasses.dataclass
@@ -162,4 +169,11 @@ class PredictiveController:
         the [22] cost model (each backlogged tuple will be compared against
         the window population ~ rate * WS), then the §8.5 band applies."""
         self.backlog = m.backlog_tuples * m.rate_tps * self.ws_seconds
-        return self.observe(m.rate_tps)
+        rc = self.observe(m.rate_tps)
+        if rc is not None:
+            from repro import obs as _obs
+            _obs.event("controller_decide", policy="predictive",
+                       rate_tps=m.rate_tps, backlog=self.backlog,
+                       queue_depth=m.queue_depth, epoch=int(rc.epoch),
+                       n_active=int(rc.n_active))
+        return rc

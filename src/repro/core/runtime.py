@@ -239,6 +239,8 @@ class VSNPipeline:
         if reconfig is not None:
             if frontier is None:
                 frontier = np.asarray(self.sg.wmark.frontier)
+            from repro import obs as _obs
+            _obs.counter_inc("pipeline.ctrl_injections")
             incoming = T.concat(staged, ctrl_lanes(
                 self.op.n_inputs, frontier, reconfig.epoch, staged.kmax,
                 staged.payload_width))

@@ -47,6 +47,7 @@ class MpChannel:
         feeding a SIGKILLed leaf's full queue must unblock as soon as the
         tier starts draining, or restore-after-kill hangs on it."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        stalled = False
         while True:
             if self._send_closed:
                 raise QueueClosed
@@ -60,6 +61,12 @@ class MpChannel:
                 self._q.put(item, timeout=slice_s)
                 return
             except _stdlib_queue.Full:
+                if not stalled:
+                    # one event per stall episode, not per poll slice
+                    stalled = True
+                    from repro import obs as _obs
+                    _obs.event("backpressure_stall", transport="mp")
+                    _obs.counter_inc("chan.mp_blocked_puts")
                 continue
 
     def get(self, timeout: Optional[float] = None) -> Any:

@@ -102,6 +102,10 @@ class LeafOut:
     wmark: int                     # reported leaf watermark W_leaf
     overflow: int                  # cumulative leaf stash-overflow count
     final: bool = False            # last message (leaf flushed and left)
+    # cross-process observability payload (drained child spans/counters/
+    # events piggybacking on the round stream); None in thread mode, where
+    # the leaf shares the parent's registry directly
+    obs: Optional[Dict] = None
 
     @property
     def n_ready(self) -> int:
@@ -212,7 +216,7 @@ class LeafGate:
         return leaving
 
 
-def run_gate_loop(gate: LeafGate, recv, send) -> None:
+def run_gate_loop(gate: LeafGate, recv, send, ship_obs: bool = False) -> None:
     """The worker protocol: drive ``gate`` from ``recv()`` messages until a
     stop/flush; shared verbatim by thread and process workers.
 
@@ -220,8 +224,24 @@ def run_gate_loop(gate: LeafGate, recv, send) -> None:
     ``("snap", round)`` | ``("stop",)``.  Every tick/cmd/snap message
     produces exactly one answer (``LeafOut`` / ``LeafSnap``) via ``send`` —
     the root's round barrier counts on it.
+
+    ``ship_obs=True`` (process workers only) attaches the child's drained
+    observability payload to each outgoing ``LeafOut``; thread workers
+    share the parent's registry and must NOT ship (double-counting).
     """
+    from repro import obs as _obs
     from repro.io.queues import QueueClosed
+
+    def answer(out: LeafOut) -> None:
+        _obs.counter_inc("leaf.rounds")
+        _obs.counter_inc("leaf.tuples_ready", out.n_ready)
+        _obs.event("leaf_push", leaf_id=out.leaf_id, round_id=out.round_id,
+                   n_ready=out.n_ready, wmark=out.wmark,
+                   overflow=out.overflow, final=out.final)
+        if ship_obs:
+            out.obs = _obs.drain_payload()
+        send(out)
+
     while True:
         try:
             msg = recv()
@@ -231,10 +251,14 @@ def run_gate_loop(gate: LeafGate, recv, send) -> None:
         if kind == "stop":
             break
         if kind == "tick":
-            send(gate.push_round(msg[1], msg[2]))
+            with _obs.span("leaf.push"):
+                out = gate.push_round(msg[1], msg[2])
+            answer(out)
         elif kind == "cmd":
             leaving = gate.apply(msg[2])
-            send(gate.push_round(msg[1], None, final=leaving))
+            with _obs.span("leaf.push"):
+                out = gate.push_round(msg[1], None, final=leaving)
+            answer(out)
             if leaving:
                 break
         elif kind == "snap":
@@ -250,8 +274,16 @@ def process_worker_main(cfg: Dict, in_q, out_q) -> None:
     initializes fresh in the child (CPU), and all channel payloads are
     numpy.  Mirrors ``run_gate_loop`` over the mp queues.
     """
+    from repro import obs as _obs
     from repro.ingest.channels import MP_CLOSE
     from repro.io.queues import QueueClosed
+
+    ship_obs = False
+    if cfg.get("obs"):
+        # the child gets its own Obs (same config as the parent's) and
+        # ships drained payloads back on the round stream
+        _obs.install(_obs.ObsConfig.from_dict(cfg["obs"]))
+        ship_obs = True
 
     gate = LeafGate(cfg["leaf_id"], cfg["n_sources"],
                     np.asarray(cfg["owned"], bool), cfg["cap"], cfg["kmax"],
@@ -264,4 +296,4 @@ def process_worker_main(cfg: Dict, in_q, out_q) -> None:
             raise QueueClosed
         return msg
 
-    run_gate_loop(gate, recv, out_q.put)
+    run_gate_loop(gate, recv, out_q.put, ship_obs=ship_obs)

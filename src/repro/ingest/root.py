@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import scalegate
 from repro.core import tuples as T
 from repro.core import watermark as wm
@@ -173,6 +174,8 @@ class RootMerge:
                     f"ingest leaf {o.leaf_id} stash overflow: "
                     f"{o.overflow} tuples dropped (was {prev})",
                     RuntimeWarning, stacklevel=2)
+                _obs.event("leaf_overflow", leaf_id=o.leaf_id,
+                           overflow=o.overflow, was=prev)
             self.leaf_overflow[o.leaf_id] = max(prev, o.overflow)
         return reports, rmask
 
@@ -222,7 +225,15 @@ class RootMerge:
                 f"ingest root stash overflow: {self.overflow} tuples "
                 f"dropped (was {prev_overflow})", RuntimeWarning,
                 stacklevel=2)
+            _obs.event("root_overflow", overflow=self.overflow,
+                       was=prev_overflow)
         self.rounds += 1
+        o = _obs.get()
+        if o is not None:
+            reg = o.registry
+            reg.inc("root.rounds")
+            reg.set_gauge("root.wmark", self.wmark)
+            reg.set_gauge("root.tuples_out", self.tuples_out)
         return out
 
     def _push_device(self, outs: Sequence[LeafOut]) -> T.TupleBatch:
@@ -259,6 +270,7 @@ class RootMerge:
             self.state, stacked, jnp.asarray(reports, jnp.int32),
             jnp.asarray(rmask))
         self.rounds += 1
+        _obs.counter_inc("root.rounds")
         self._out_valid.append(out.num_valid())
         if self.check_every and self.rounds % self.check_every == 0:
             self._verify_round(out)
@@ -290,7 +302,10 @@ class RootMerge:
                 f"ingest root stash overflow: {self.overflow} tuples "
                 f"dropped (was {self._last_overflow_warned})",
                 RuntimeWarning, stacklevel=2)
+            _obs.event("root_overflow", overflow=self.overflow,
+                       was=self._last_overflow_warned)
         self._last_overflow_warned = self.overflow
+        _obs.gauge_set("root.wmark", self.wmark)
 
     def sync_stats(self) -> None:
         """Materialize the device path's lazily-tracked stats (blocks on the

@@ -46,6 +46,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import scalegate
 from repro.core import tuples as T
 from repro.ingest import leaf as L
@@ -320,6 +321,11 @@ class IngestTier:
                        owned=np.asarray(owned, bool), cap=self.leaf_cap,
                        kmax=self._kmax, payload_width=self._pw,
                        backend=self.backend, state=state)
+            o = _obs.get()
+            if o is not None:
+                # the child installs its own Obs with the parent's config
+                # and ships drained payloads back on LeafOut.obs
+                cfg["obs"] = o.cfg.to_dict()
             h.chan = make_channel("process", self.chan_cap, self._ctx)
             h.proc = self._ctx.Process(
                 target=L.process_worker_main,
@@ -475,6 +481,9 @@ class IngestTier:
                     h = self._handles.get(l)
                     if (h is not None and h.proc is not None
                             and not h.proc.is_alive()):
+                        _obs.event("leaf_failure", leaf_id=l,
+                                   round_id=rec.round_id,
+                                   exitcode=h.proc.exitcode)
                         raise LeafFailure(
                             f"ingest leaf {l} died (exit code "
                             f"{h.proc.exitcode}) before answering round "
@@ -561,14 +570,25 @@ class IngestTier:
                     outs = self._collect(rec)
                 if rec.kind == "snap":
                     self._store_snapshot(rec, outs)
+                    _obs.event("tier_snapshot", round_id=rec.round_id,
+                               source_ticks=rec.snap_tick,
+                               emitted_rounds=self._rounds_emitted)
                     continue               # snapshots merge nothing
-                self.root.apply_pre(rec.root_ops)
-                out = self.root.push(outs)
-                self.root.apply_post(rec.root_ops)
+                for lo in outs:            # cross-process obs piggybacks
+                    if lo.obs is not None:
+                        _obs.ingest_payload(lo.obs)
+                with _obs.span("root.merge"):
+                    self.root.apply_pre(rec.root_ops)
+                    out = self.root.push(outs)
+                    self.root.apply_post(rec.root_ops)
                 if rec.cmd is not None:
                     lat = (time.perf_counter() - rec.cmd.t_issued) * 1e3
                     (self.attach_ms if rec.cmd.kind == "add"
                      else self.detach_ms).append(lat)
+                    _obs.event("tier_reconfig", cmd=rec.cmd.kind,
+                               leaf_id=rec.cmd.leaf_id,
+                               round_id=rec.round_id, latency_ms=lat,
+                               leaves=[int(l) for l in self.part.leaves])
                 if self.emitted is not None:
                     self.emitted.append(out)
                 self._rounds_emitted += 1

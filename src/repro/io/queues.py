@@ -83,6 +83,10 @@ class BoundedQueue:
         with self._cv:
             if len(self._items) >= self.cap:
                 self.blocked_puts += 1
+                from repro import obs as _obs
+                _obs.event("backpressure_stall", transport="queue",
+                           depth=len(self._items), cap=self.cap)
+                _obs.counter_inc("queue.blocked_puts")
                 if not self._cv.wait_for(
                         lambda: self._closed or len(self._items) < self.cap,
                         timeout=timeout):

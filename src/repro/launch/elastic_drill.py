@@ -81,6 +81,11 @@ def main(argv=None):
     ap.add_argument("--drills", default="straggler,serving,crash,recovery",
                     help="comma list of straggler,mesh,live,ingest,"
                          "serving,crash,recovery,recovery-kill")
+    ap.add_argument("--obs-dump", default=None, metavar="DIR",
+                    help="install the observability layer and dump the "
+                         "flight-recorder ring + metrics snapshot into DIR "
+                         "— on drill failure AND at clean exit (the CI "
+                         "chaos job uploads DIR as an artifact)")
     args = ap.parse_args(argv)
     drills = {d.strip() for d in args.drills.split(",")}
     if args.mesh:
@@ -88,6 +93,29 @@ def main(argv=None):
     if args.live:
         drills.add("live")
 
+    if not args.obs_dump:
+        return run_drills(args, drills)
+
+    from repro import obs as _obs
+    o = _obs.install(_obs.ObsConfig(enabled=True, trace=True,
+                                    dump_dir=args.obs_dump))
+    try:
+        rc = run_drills(args, drills)
+    except BaseException as e:
+        # the runtime layers may have dumped already (runtime_crash /
+        # ingest_error paths); this catches failures outside them —
+        # drill-level assertion failures included
+        o.dump_flight(reason=f"drill_failure: {e!r}")
+        o.export(args.obs_dump)
+        raise
+    o.export(args.obs_dump)
+    path = o.dump_flight(reason="drill_complete")
+    print(f"[obs] metrics + flight ring dumped to {args.obs_dump} "
+          f"({path})")
+    return rc
+
+
+def run_drills(args, drills):
     k = 64
     from repro.data import datagen
 

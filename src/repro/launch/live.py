@@ -50,10 +50,12 @@ import numpy as np
 import jax
 
 from repro import api
+from repro import obs as _obs
 from repro.core.async_runtime import run_sync
 from repro.data import datagen
 from repro.io import (CollectSink, NullSink, RateSchedule, ReplaySource,
                       SyntheticSource, load_stream, save_stream)
+from repro.obs import ObsConfig
 
 K_VIRT = 256
 # Q5-style abrupt phases (tuples/s offered), cycled over the tick budget
@@ -90,10 +92,39 @@ def make_stream(args):
     return ReplaySource(batches, schedule=sched)
 
 
+def make_obs_cfg(args) -> ObsConfig:
+    on = bool(args.trace or args.obs_export or args.flight_dump)
+    return ObsConfig(enabled=on, trace=bool(args.trace),
+                     export_dir=args.obs_export)
+
+
+def finish_obs(args, report) -> None:
+    """Post-run observability outputs: per-stage latency breakdown
+    (--trace), metrics export (--obs-export handled by Runtime.run, also
+    here for the resume path), flight-ring dump (--flight-dump)."""
+    o = _obs.get()
+    if o is None:
+        return
+    if args.trace and getattr(report, "stage_latency_ms", None):
+        print("[live/trace] per-stage latency (ms):")
+        for stage, q in sorted(report.stage_latency_ms.items()):
+            print(f"    {stage:<20} p50={q['p50']:8.3f} "
+                  f"p90={q['p90']:8.3f} p99={q['p99']:8.3f} "
+                  f"n={int(q['count'])}")
+    if args.obs_export:
+        paths = o.export(args.obs_export)
+        print(f"[live/obs  ] exported {sorted(paths.values())}")
+    if args.flight_dump:
+        p = o.dump_flight("on_demand", path=args.flight_dump)
+        print(f"[live/obs  ] flight ring ({len(o.flight.events)} events) "
+              f"-> {p}")
+
+
 def make_cfg(args, n_sources: int) -> api.RuntimeConfig:
     """One declarative description of the run — every launcher knob lands
     in the same ``RuntimeConfig`` the checkpoint manifest carries."""
     return api.RuntimeConfig(
+        obs=make_obs_cfg(args),
         op="count", wa=500, ws=1000, wt="multi", k_virt=K_VIRT,
         out_cap=1024, extra_slots=2,
         n_max=args.n_max, n_active=2,
@@ -156,6 +187,15 @@ def main(argv=None):
                     help="restore from the latest complete checkpoint in "
                          "--checkpoint-dir and replay --replay from the "
                          "snapshot's frontier")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable span tracing (per-stage latency "
+                         "breakdown printed after the run)")
+    ap.add_argument("--obs-export", default=None, metavar="DIR",
+                    help="write metrics.json/metrics.prom (+ flight.json) "
+                         "to DIR after the run; implies obs on")
+    ap.add_argument("--flight-dump", default=None, metavar="FILE",
+                    help="dump the flight-recorder ring to FILE after the "
+                         "run (and on crash); implies obs on")
     args = ap.parse_args(argv)
 
     if args.mesh and len(jax.devices()) < args.mesh:
@@ -167,10 +207,16 @@ def main(argv=None):
     if args.resume:
         assert args.checkpoint_dir, "--resume needs --checkpoint-dir"
         assert args.replay, "--resume needs the --replay record to replay"
+        ocfg = make_obs_cfg(args)
+        if ocfg.enabled:
+            # the manifest's config wins inside resume_runtime; the resume
+            # flags install obs explicitly so a restored run can be traced
+            _obs.install(ocfg)
         rt = api.resume_runtime(args.checkpoint_dir, args.replay)
         report = rt.run()
         print(f"[live/resume] restored step {rt.restored_step} from "
               f"{args.checkpoint_dir}; {report.summary()}")
+        finish_obs(args, report)
         print("live resume OK")
         return 0
 
@@ -196,6 +242,7 @@ def main(argv=None):
                            record_tier=bool(args.ingest_hosts))
     report = rt.run()
     print(f"[live/async] {report.summary()}")
+    finish_obs(args, report)
     if rt.checkpointer is not None:
         print(f"[live/ckpt ] saved steps {rt.checkpointer.saved_steps} "
               f"-> {cfg.checkpoint_dir} (resume with --resume)")

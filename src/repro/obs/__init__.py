@@ -1,0 +1,221 @@
+"""repro.obs — unified observability: tracing, flight recorder, metrics.
+
+One ``Obs`` object bundles the three instruments sharing a registry:
+
+- ``obs.registry`` — counters / gauges / quantile-sketch histograms with a
+  versioned-schema snapshot (JSON + Prometheus text); see ``registry.py``.
+- ``obs.tracer`` — nested spans; per-stage latency quantiles land in
+  ``span.*`` histograms; see ``trace.py``.
+- ``obs.flight`` — ring buffer of structured events, JSON-dumped on
+  crash/chaos failure or on demand; see ``flight.py``.
+
+A process-global current ``Obs`` is installed with ``install(ObsConfig)``
+(or ``set_current`` for an existing instance). Instrumented call sites use
+the module-level helpers ``span()`` / ``event()`` / ``counter_inc()`` /
+``gauge_set()``: when nothing is installed (the default) they are a single
+global load + ``is None`` test, so the off path costs nanoseconds.
+
+Cross-process propagation: a child ingest-leaf process installs its own
+``Obs`` (config travels in the worker cfg dict), instruments locally, and
+ships ``drain_payload()`` dicts piggybacked on ``LeafOut.obs`` over the
+existing channels; the parent folds them in with ``ingest_payload()``.
+Thread-mode leaves share the parent's global ``Obs`` directly and must
+*not* ship payloads (that would double-count).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .registry import (MetricsRegistry, SCHEMA_VERSION, snapshot_schema,
+                       validate_snapshot)
+from .trace import Tracer, _NULL_SPAN
+from .flight import FlightRecorder
+
+__all__ = [
+    "ObsConfig", "Obs", "install", "get", "set_current",
+    "span", "event", "counter_inc", "gauge_set", "observe",
+    "drain_payload", "ingest_payload",
+    "MetricsRegistry", "Tracer", "FlightRecorder",
+    "SCHEMA_VERSION", "snapshot_schema", "validate_snapshot",
+]
+
+
+@dataclass
+class ObsConfig:
+    """Observability knobs carried by ``RuntimeConfig`` (JSON-serializable).
+
+    ``enabled`` turns the layer on (registry + flight recorder); ``trace``
+    additionally turns on span timing — the separately-gated cost tier
+    (<2% without, <10% with, per the q1 bench row). ``dump_dir`` set makes
+    the runtime dump the flight ring there on crash; ``export_dir`` set
+    makes ``Runtime.run``/launchers write ``metrics.json`` +
+    ``metrics.prom`` there on completion.
+    """
+    enabled: bool = False
+    trace: bool = False
+    flight: bool = True
+    flight_cap: int = 4096
+    span_cap: int = 2048
+    dump_dir: Optional[str] = None
+    export_dir: Optional[str] = None
+
+    def to_dict(self) -> Dict:
+        return {
+            "enabled": self.enabled, "trace": self.trace,
+            "flight": self.flight, "flight_cap": self.flight_cap,
+            "span_cap": self.span_cap, "dump_dir": self.dump_dir,
+            "export_dir": self.export_dir,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ObsConfig":
+        names = {f for f in cls.__dataclass_fields__}  # type: ignore[attr-defined]
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+class Obs:
+    """Bundle of registry + tracer + flight recorder for one process."""
+
+    def __init__(self, cfg: Optional[ObsConfig] = None):
+        self.cfg = cfg or ObsConfig(enabled=True)
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(self.registry, enabled=self.cfg.trace,
+                             span_cap=self.cfg.span_cap)
+        self.flight = FlightRecorder(cap=self.cfg.flight_cap,
+                                     enabled=self.cfg.flight)
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        return self.registry.snapshot()
+
+    def export(self, out_dir: str) -> Dict[str, str]:
+        """Write metrics.json + metrics.prom (+ flight.json when the ring
+        has events) under ``out_dir``; returns {artifact: path}."""
+        os.makedirs(out_dir, exist_ok=True)
+        paths = {}
+        snap = self.snapshot()
+        jp = os.path.join(out_dir, "metrics.json")
+        with open(jp, "w") as f:
+            json.dump(snap, f, indent=1)
+        paths["metrics_json"] = jp
+        pp = os.path.join(out_dir, "metrics.prom")
+        with open(pp, "w") as f:
+            f.write(self.registry.to_prometheus())
+        paths["metrics_prom"] = pp
+        if self.flight.events:
+            paths["flight_json"] = self.flight.dump_json(
+                os.path.join(out_dir, "flight.json"), reason="export")
+        return paths
+
+    def dump_flight(self, reason: str, path: Optional[str] = None) -> Optional[str]:
+        """Dump the flight ring to ``path`` or ``cfg.dump_dir``; returns
+        the written path (None when no destination is configured)."""
+        if path is None:
+            if not self.cfg.dump_dir:
+                return None
+            path = os.path.join(self.cfg.dump_dir,
+                                f"flight-{os.getpid()}.json")
+        return self.flight.dump_json(path, reason=reason)
+
+
+# ------------------------------------------------ process-global current --
+
+_current: Optional[Obs] = None
+
+
+def install(cfg: Optional[ObsConfig] = None) -> Obs:
+    """Create and install a fresh ``Obs`` as the process-global current
+    (regardless of ``cfg.enabled`` — callers gate on that themselves)."""
+    global _current
+    _current = Obs(cfg)
+    return _current
+
+
+def set_current(obs: Optional[Obs]) -> Optional[Obs]:
+    """Install an existing ``Obs`` (or None to disable); returns the
+    previous one so callers can restore it (the overhead bench does)."""
+    global _current
+    prev = _current
+    _current = obs
+    return prev
+
+
+def get() -> Optional[Obs]:
+    return _current
+
+
+# ------------------------------------- near-free instrumentation helpers --
+
+def span(name: str):
+    """Open a tracing span on the current Obs; no-op singleton if obs or
+    tracing is off (one global load + None test on the off path)."""
+    o = _current
+    if o is None or not o.tracer.enabled:
+        return _NULL_SPAN
+    return o.tracer.span(name)
+
+
+def event(kind: str, **fields) -> None:
+    o = _current
+    if o is None:
+        return
+    o.flight.record(kind, **fields)
+
+
+def counter_inc(name: str, n: float = 1.0) -> None:
+    o = _current
+    if o is None:
+        return
+    o.registry.inc(name, n)
+
+
+def gauge_set(name: str, v: float) -> None:
+    o = _current
+    if o is None:
+        return
+    o.registry.set_gauge(name, v)
+
+
+def observe(name: str, v: float) -> None:
+    o = _current
+    if o is None:
+        return
+    o.registry.observe(name, v)
+
+
+# --------------------------------------------- cross-process propagation --
+
+def drain_payload() -> Optional[Dict]:
+    """Child-side: pop everything recorded since the last drain into one
+    plain-dict payload (None when obs is off or nothing new)."""
+    o = _current
+    if o is None:
+        return None
+    payload = {}
+    counters = o.registry.drain_counters()
+    if counters:
+        payload["counters"] = counters
+    spans = o.tracer.drain()
+    if spans:
+        payload["spans"] = spans
+    events = o.flight.drain()
+    if events:
+        payload["events"] = events
+    return payload or None
+
+
+def ingest_payload(payload: Optional[Dict]) -> None:
+    """Parent-side: fold a child's drained payload into the current Obs."""
+    o = _current
+    if o is None or not payload:
+        return
+    if "counters" in payload:
+        o.registry.merge_counters(payload["counters"])
+    if "spans" in payload:
+        o.tracer.ingest(payload["spans"])
+    if "events" in payload:
+        o.flight.ingest(payload["events"])

@@ -1,0 +1,78 @@
+"""Flight recorder: fixed-size ring buffer of structured runtime events.
+
+Every event is a flat dict with a ``kind`` plus caller fields (tick ids,
+watermarks, queue high-water marks, reconfig epochs, backpressure stalls,
+leaf failures...), stamped with monotonic time ``t`` (perf_counter, for
+intra-process ordering), ``wall`` (time.time, for cross-process ordering —
+child processes have different perf_counter origins), ``pid`` and thread
+name. The ring holds the last ``cap`` events; a crash or chaos-drill
+failure dumps it to JSON so failures come with a timeline instead of a
+stack trace.
+
+Dump format (``dump_json``)::
+
+    {"dumped_unix": ..., "reason": "...", "pid": ...,
+     "n_events": N, "events": [{"kind": ..., "t": ..., "wall": ...,
+                                "pid": ..., "thread": ..., **fields}, ...]}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+
+class FlightRecorder:
+    def __init__(self, cap: int = 4096, enabled: bool = True):
+        self.enabled = enabled
+        self.events: deque = deque(maxlen=cap)
+        self._pid = os.getpid()
+
+    def record(self, kind: str, **fields) -> None:
+        if not self.enabled:
+            return
+        fields["kind"] = kind
+        fields["t"] = time.perf_counter()
+        fields["wall"] = time.time()
+        fields["pid"] = self._pid
+        fields["thread"] = threading.current_thread().name
+        self.events.append(fields)
+
+    # -- cross-process shipping ---------------------------------------------
+    def drain(self) -> List[Dict]:
+        out = []
+        while self.events:
+            out.append(self.events.popleft())
+        return out
+
+    def ingest(self, events: List[Dict]) -> None:
+        if not self.enabled:
+            return
+        self.events.extend(events)
+
+    # -- export --------------------------------------------------------------
+    def timeline(self) -> List[Dict]:
+        """Events sorted by wall clock (stable across processes)."""
+        return sorted(self.events, key=lambda e: e.get("wall", 0.0))
+
+    def dump(self, reason: str = "on_demand") -> Dict:
+        return {
+            "dumped_unix": time.time(),
+            "reason": reason,
+            "pid": self._pid,
+            "n_events": len(self.events),
+            "events": self.timeline(),
+        }
+
+    def dump_json(self, path: str, reason: str = "on_demand") -> str:
+        """Write the ring to ``path`` (dirs created); returns the path."""
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.dump(reason), f, indent=1, default=repr)
+        return path

@@ -1,0 +1,273 @@
+"""MetricsRegistry: counters, gauges, and quantile-sketch histograms.
+
+One registry instance backs the whole observability layer: the tracer folds
+span durations into it, the flight recorder and ``MetricsBus`` mirror their
+counts into it, and the export side renders it as a *versioned-schema*
+snapshot — JSON (``snapshot()``, validated by ``validate_snapshot``) and
+Prometheus text exposition (``to_prometheus()``).
+
+The histogram is a geometric-bucket sketch (ratio 2^(1/8) ≈ 9% bucket
+width, quantile error ≤ ~4.5% after midpoint interpolation): recording is
+O(1) (one ``bisect`` over a precomputed bound table), memory is fixed, and
+a long run never grows state — the property ``MetricsBus`` leans on to cap
+its per-tick retention while keeping exact totals and full-run quantiles.
+
+Cross-process: a child registry ships counter *deltas* (``drain_counters``)
+over the ingest channels; the parent folds them in with
+``merge_counters`` — see ``repro.obs.__init__.drain_payload``.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+import time
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+# geometric bucket bounds: 1e-7 .. ~1.8e5, ratio 2**(1/8)  (~324 buckets)
+_RATIO = 2.0 ** 0.125
+_N_BUCKETS = 324
+BUCKET_BOUNDS: List[float] = [1e-7 * _RATIO ** i for i in range(_N_BUCKETS)]
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Fixed-memory geometric-bucket quantile sketch over values > 0
+    (zero/negative values land in the first bucket).  Unit-agnostic."""
+
+    __slots__ = ("counts", "count", "sum", "min", "max")
+
+    def __init__(self):
+        self.counts = [0] * (_N_BUCKETS + 1)   # +1: overflow bucket
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def record(self, v: float) -> None:
+        self.counts[bisect.bisect_left(BUCKET_BOUNDS, v)] += 1
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def quantile(self, q: float) -> float:
+        """Approximate q-quantile: geometric midpoint of the bucket holding
+        rank ceil(q * count), clamped to the observed [min, max]."""
+        if self.count == 0:
+            return 0.0
+        rank = max(1, math.ceil(q * self.count))
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= rank:
+                if i == 0:
+                    mid = BUCKET_BOUNDS[0]
+                elif i >= _N_BUCKETS:
+                    mid = BUCKET_BOUNDS[-1]
+                else:
+                    mid = math.sqrt(BUCKET_BOUNDS[i - 1] * BUCKET_BOUNDS[i])
+                return min(max(mid, self.min), self.max)
+        return self.max                            # pragma: no cover
+
+    def merge(self, other: "Histogram") -> None:
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+
+
+class MetricsRegistry:
+    """Named counters/gauges/histograms with get-or-create accessors.
+    Mutators are GIL-atomic on the instrument objects; creation takes a
+    lock (instruments are created once, updated hot)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.histograms: Dict[str, Histogram] = {}
+        self._shipped: Dict[str, float] = {}    # drain_counters watermark
+
+    def counter(self, name: str) -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self.counters.setdefault(name, Counter())
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self.gauges.get(name)
+        if g is None:
+            with self._lock:
+                g = self.gauges.setdefault(name, Gauge())
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            with self._lock:
+                h = self.histograms.setdefault(name, Histogram())
+        return h
+
+    # convenience mutators (the instrumented call sites use these)
+    def inc(self, name: str, n: float = 1.0) -> None:
+        self.counter(name).inc(n)
+
+    def set_gauge(self, name: str, v: float) -> None:
+        self.gauge(name).set(v)
+
+    def observe(self, name: str, v: float) -> None:
+        self.histogram(name).record(v)
+
+    # -- cross-process shipping ---------------------------------------------
+    def drain_counters(self) -> Dict[str, float]:
+        """Counter deltas since the last drain (child-side shipping)."""
+        out = {}
+        for name, c in list(self.counters.items()):
+            delta = c.value - self._shipped.get(name, 0.0)
+            if delta:
+                out[name] = delta
+                self._shipped[name] = c.value
+        return out
+
+    def merge_counters(self, deltas: Dict[str, float]) -> None:
+        for name, d in deltas.items():
+            self.counter(name).inc(d)
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """The versioned-schema metrics snapshot (see ``snapshot_schema``)."""
+        hists = {}
+        for name, h in sorted(self.histograms.items()):
+            hists[name] = {
+                "count": h.count,
+                "sum": h.sum,
+                "min": (0.0 if h.count == 0 else h.min),
+                "max": (0.0 if h.count == 0 else h.max),
+                "p50": h.quantile(0.50),
+                "p90": h.quantile(0.90),
+                "p99": h.quantile(0.99),
+            }
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "generated_unix": time.time(),
+            "counters": {n: c.value for n, c in sorted(self.counters.items())},
+            "gauges": {n: g.value for n, g in sorted(self.gauges.items())},
+            "histograms": hists,
+        }
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition of the same registry state (metric
+        names sanitized: dots/dashes become underscores)."""
+        def sane(name: str) -> str:
+            return "".join(ch if (ch.isalnum() or ch == "_") else "_"
+                           for ch in name)
+
+        lines = []
+        for name, c in sorted(self.counters.items()):
+            n = sane(name)
+            lines += [f"# TYPE {n} counter", f"{n} {c.value:g}"]
+        for name, g in sorted(self.gauges.items()):
+            n = sane(name)
+            lines += [f"# TYPE {n} gauge", f"{n} {g.value:g}"]
+        for name, h in sorted(self.histograms.items()):
+            n = sane(name)
+            lines += [f"# TYPE {n} summary",
+                      f"{n}_count {h.count}", f"{n}_sum {h.sum:g}"]
+            for q in (0.50, 0.90, 0.99):
+                lines.append(f'{n}{{quantile="{q}"}} {h.quantile(q):g}')
+        return "\n".join(lines) + "\n"
+
+
+# ------------------------------------------------------- schema contract --
+
+_HIST_KEYS = ("count", "sum", "min", "max", "p50", "p90", "p99")
+
+
+def snapshot_schema() -> Dict:
+    """JSON-Schema document for ``MetricsRegistry.snapshot()`` — committed
+    behavior: bump ``SCHEMA_VERSION`` on any breaking change."""
+    num = {"type": "number"}
+    return {
+        "$schema": "http://json-schema.org/draft-07/schema#",
+        "title": f"repro.obs metrics snapshot v{SCHEMA_VERSION}",
+        "type": "object",
+        "required": ["schema_version", "generated_unix", "counters",
+                     "gauges", "histograms"],
+        "properties": {
+            "schema_version": {"type": "integer", "const": SCHEMA_VERSION},
+            "generated_unix": num,
+            "counters": {"type": "object", "additionalProperties": num},
+            "gauges": {"type": "object", "additionalProperties": num},
+            "histograms": {
+                "type": "object",
+                "additionalProperties": {
+                    "type": "object",
+                    "required": list(_HIST_KEYS),
+                    "properties": {k: num for k in _HIST_KEYS},
+                },
+            },
+        },
+    }
+
+
+def validate_snapshot(snap: Dict) -> None:
+    """Structural validation of a snapshot against the schema contract
+    (dependency-free implementation of exactly what ``snapshot_schema``
+    declares; raises ``ValueError`` on the first violation)."""
+    if not isinstance(snap, dict):
+        raise ValueError(f"snapshot must be an object, got {type(snap)}")
+    for key in ("schema_version", "generated_unix", "counters", "gauges",
+                "histograms"):
+        if key not in snap:
+            raise ValueError(f"snapshot missing required key {key!r}")
+    if snap["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(f"schema_version {snap['schema_version']!r} != "
+                         f"{SCHEMA_VERSION}")
+    if not isinstance(snap["generated_unix"], (int, float)):
+        raise ValueError("generated_unix must be a number")
+    for section in ("counters", "gauges"):
+        if not isinstance(snap[section], dict):
+            raise ValueError(f"{section} must be an object")
+        for name, v in snap[section].items():
+            if not isinstance(v, (int, float)):
+                raise ValueError(f"{section}[{name!r}] must be a number, "
+                                 f"got {type(v)}")
+    if not isinstance(snap["histograms"], dict):
+        raise ValueError("histograms must be an object")
+    for name, h in snap["histograms"].items():
+        if not isinstance(h, dict):
+            raise ValueError(f"histograms[{name!r}] must be an object")
+        for k in _HIST_KEYS:
+            if k not in h:
+                raise ValueError(f"histograms[{name!r}] missing {k!r}")
+            if not isinstance(h[k], (int, float)):
+                raise ValueError(f"histograms[{name!r}][{k!r}] must be a "
+                                 f"number")

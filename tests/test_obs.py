@@ -1,0 +1,385 @@
+"""Unified observability layer (repro.obs) — PR-8 acceptance.
+
+The contracts under test:
+  * MetricsRegistry: exact counter/gauge totals, fixed-memory histogram
+    sketch with bounded quantile error, versioned-schema snapshot
+    (validated + rejected on tamper) and Prometheus text exposition;
+  * Tracer: nested spans fold into ``span.*`` histograms with parent
+    paths; disabled tracing is a shared null-object no-op;
+  * FlightRecorder: fixed-size ring, structured events, JSON dump format;
+  * cross-process propagation: counter deltas + finished spans + events
+    drained from a child ``Obs`` fold into the parent; real spawned
+    ingest-leaf processes surface their metrics/spans/events in the
+    parent snapshot;
+  * MetricsBus: bounded per-tick retention with exact full-run totals and
+    sketch-backed quantiles after eviction; the pending-detection leak is
+    flushed at stop() and surfaced in the run report;
+  * end-to-end: a ``build_runtime`` run with obs on produces the per-tick
+    stage-latency breakdown across every instrumented stage, and a
+    planted chaos failure (SIGKILLed ingest leaf) dumps a flight-recorder
+    JSON timeline spanning leaf, root/tier, runtime, and controller
+    events.
+"""
+
+import dataclasses
+import glob
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.obs import ObsConfig
+from repro.obs.flight import FlightRecorder
+from repro.obs.registry import (Histogram, MetricsRegistry, SCHEMA_VERSION,
+                                validate_snapshot)
+from repro.obs.trace import Tracer, _NULL_SPAN
+
+K = 64
+N_SRC = 4
+
+
+@pytest.fixture
+def obs_env():
+    """Install a fresh Obs for the test; always restore the previous
+    global afterwards (the suite must not leak instrumentation)."""
+    prev = obs.get()
+
+    def make(**kw):
+        return obs.install(ObsConfig(**kw))
+
+    yield make
+    obs.set_current(prev)
+
+
+def agg_stream(n_ticks=6, seed=0, tick=16, n_sources=N_SRC):
+    from repro.data import datagen
+    rng = np.random.default_rng(seed)
+    return list(datagen.tweets(rng, n_ticks=n_ticks, tick=tick,
+                               words_per_tweet=3, vocab=300, k_virt=K,
+                               rate_per_tick=30, n_sources=n_sources))
+
+
+# ------------------------------------------------------------ registry ----
+
+def test_registry_exact_totals_and_snapshot():
+    reg = MetricsRegistry()
+    for _ in range(100):
+        reg.inc("a.ticks")
+    reg.inc("a.tuples", 2.5)
+    reg.set_gauge("a.depth", 3)
+    reg.set_gauge("a.depth", 7)
+    for v in (1e-4, 2e-4, 3e-4):
+        reg.observe("a.lat", v)
+    snap = reg.snapshot()
+    validate_snapshot(snap)
+    assert snap["schema_version"] == SCHEMA_VERSION
+    assert snap["counters"]["a.ticks"] == 100
+    assert snap["counters"]["a.tuples"] == 2.5
+    assert snap["gauges"]["a.depth"] == 7            # last write wins
+    h = snap["histograms"]["a.lat"]
+    assert h["count"] == 3 and h["min"] == 1e-4 and h["max"] == 3e-4
+    assert abs(h["sum"] - 6e-4) < 1e-12
+
+
+def test_histogram_sketch_quantiles_bounded_error():
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-7.0, sigma=1.0, size=5000)   # ~ms latencies
+    h = Histogram()
+    for v in vals:
+        h.record(float(v))
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.quantile(vals, q))
+        approx = h.quantile(q)
+        # geometric buckets are 2**(1/8) wide: midpoint error <= ~4.5%,
+        # plus rank granularity — 10% is a safe hard bound
+        assert abs(approx - exact) / exact < 0.10, (q, exact, approx)
+    # quantiles are clamped to the observed range
+    assert h.min <= h.quantile(0.0001) and h.quantile(0.9999) <= h.max
+
+
+def test_snapshot_validation_rejects_tampering():
+    reg = MetricsRegistry()
+    reg.inc("x")
+    reg.observe("y", 0.5)
+    snap = reg.snapshot()
+    validate_snapshot(snap)
+
+    bad = dict(snap)
+    bad["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_snapshot(bad)
+    bad = dict(snap)
+    del bad["histograms"]
+    with pytest.raises(ValueError, match="histograms"):
+        validate_snapshot(bad)
+    bad = json.loads(json.dumps(snap))
+    bad["counters"]["x"] = "not-a-number"
+    with pytest.raises(ValueError, match="number"):
+        validate_snapshot(bad)
+    bad = json.loads(json.dumps(snap))
+    del bad["histograms"]["y"]["p99"]
+    with pytest.raises(ValueError, match="p99"):
+        validate_snapshot(bad)
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.inc("bus.ticks", 5)
+    reg.set_gauge("bus.queue-depth", 2)
+    reg.observe("span.root.merge", 0.01)
+    text = reg.to_prometheus()
+    assert "# TYPE bus_ticks counter" in text
+    assert "bus_ticks 5" in text
+    assert "# TYPE bus_queue_depth gauge" in text     # sanitized name
+    assert "# TYPE span_root_merge summary" in text
+    assert 'span_root_merge{quantile="0.99"}' in text
+    assert text.endswith("\n")
+
+
+# -------------------------------------------------------------- tracer ----
+
+def test_tracer_nested_spans_paths_and_quantiles():
+    reg = MetricsRegistry()
+    tr = Tracer(reg, enabled=True)
+    with tr.span("runtime.dispatch"):
+        with tr.span("pipeline.step"):
+            pass
+    recs = list(tr.finished)
+    assert [r["name"] for r in recs] == ["pipeline.step", "runtime.dispatch"]
+    assert recs[0]["path"] == "runtime.dispatch/pipeline.step"
+    assert recs[1]["path"] == "runtime.dispatch"
+    assert all(r["dur_s"] >= 0 and r["pid"] == os.getpid() for r in recs)
+    lat = tr.stage_latency_ms()
+    assert set(lat) == {"runtime.dispatch", "pipeline.step"}
+    assert lat["runtime.dispatch"]["count"] == 1
+    assert {"p50", "p90", "p99", "mean"} <= set(lat["runtime.dispatch"])
+
+
+def test_disabled_tracing_is_null_object():
+    tr = Tracer(MetricsRegistry(), enabled=False)
+    assert tr.span("x") is _NULL_SPAN       # shared singleton, no alloc
+    with tr.span("x"):
+        pass
+    assert not tr.finished and not tr.registry.histograms
+    # module helpers with no Obs installed: single None test, no effect
+    prev = obs.set_current(None)
+    try:
+        assert obs.span("x") is _NULL_SPAN
+        obs.event("tick", tick_id=1)
+        obs.counter_inc("c")
+        obs.gauge_set("g", 1.0)
+        obs.observe("h", 1.0)
+        assert obs.drain_payload() is None
+    finally:
+        obs.set_current(prev)
+
+
+# ----------------------------------------------------- flight recorder ----
+
+def test_flight_ring_bounded_and_dump_format(tmp_path):
+    fr = FlightRecorder(cap=8)
+    for i in range(20):
+        fr.record("tick", tick_id=i)
+    assert len(fr.events) == 8                       # ring, not a log
+    assert [e["tick_id"] for e in fr.events] == list(range(12, 20))
+    e = fr.events[0]
+    assert e["kind"] == "tick" and e["pid"] == os.getpid()
+    assert {"t", "wall", "thread"} <= set(e)
+    path = fr.dump_json(str(tmp_path / "sub" / "flight.json"),
+                        reason="chaos_drill")
+    d = json.loads(open(path).read())
+    assert d["reason"] == "chaos_drill" and d["n_events"] == 8
+    assert [ev["tick_id"] for ev in d["events"]] == list(range(12, 20))
+    fr_off = FlightRecorder(cap=8, enabled=False)
+    fr_off.record("tick", tick_id=0)
+    assert not fr_off.events
+
+
+# ------------------------------------------- cross-process propagation ----
+
+def test_payload_drain_and_ingest_roundtrip(obs_env):
+    parent = obs_env(enabled=True, trace=True)
+    child = obs.Obs(ObsConfig(enabled=True, trace=True))
+    with child.tracer.span("leaf.push"):
+        pass
+    child.registry.inc("leaf.rounds", 3)
+    child.flight.record("leaf_push", leaf_id=1, round_id=0)
+
+    obs.set_current(child)
+    payload = obs.drain_payload()
+    obs.set_current(parent)
+    assert payload["counters"] == {"leaf.rounds": 3}
+    assert len(payload["spans"]) == 1 and len(payload["events"]) == 1
+
+    obs.ingest_payload(payload)
+    assert parent.registry.counters["leaf.rounds"].value == 3
+    assert parent.registry.histograms["span.leaf.push"].count == 1
+    assert parent.flight.events[0]["kind"] == "leaf_push"
+    # deltas: a second drain with no new activity ships nothing
+    obs.set_current(child)
+    assert obs.drain_payload() is None
+
+
+def test_process_leaf_obs_surfaces_in_parent(obs_env):
+    """Real spawned ingest-leaf processes: child counters, span histograms,
+    and flight events all land in the parent's snapshot."""
+    from repro.ingest import IngestTier
+
+    o = obs_env(enabled=True, trace=True)
+    batches = agg_stream(n_ticks=3)
+    tier = IngestTier(batches, N_SRC, 2, worker="process", leaf_cap=32,
+                      root_cap=64)
+    list(tier)
+    snap = o.snapshot()
+    validate_snapshot(snap)
+    assert snap["counters"]["leaf.rounds"] >= 2 * 3   # 2 leaves x 3+ rounds
+    assert snap["counters"]["leaf.tuples_ready"] > 0
+    assert snap["histograms"]["span.leaf.push"]["count"] >= 2 * 3
+    pids = {e["pid"] for e in o.flight.events if e["kind"] == "leaf_push"}
+    assert pids and os.getpid() not in pids            # shipped from children
+    assert len(pids) == 2                              # one per leaf process
+
+
+# ----------------------------------------------------------- MetricsBus ----
+
+def test_metrics_bus_bounded_retention_exact_totals():
+    from repro.io.metrics import MetricsBus
+
+    bus = MetricsBus(window=4, retain=8)
+    bus.start()
+    lats = [0.001 * (i % 10 + 1) for i in range(100)]
+    for i, lat in enumerate(lats):
+        bus.record_tick(i, 10, lat, None, 0, n_active=2)
+    bus.stop()
+    assert len(bus.records) == 8                      # bounded
+    assert bus.n_ticks == 100                         # exact
+    assert bus.total_tuples == 1000                   # exact
+    p50, p99 = bus.latency_quantiles_ms()             # sketch fallback
+    # empirical (non-interpolated) quantiles: the sketch's contract
+    e50, e99 = np.percentile(np.asarray(lats) * 1e3, [50, 99],
+                             method="lower")
+    assert abs(p50 - e50) / e50 < 0.10
+    assert abs(p99 - e99) / e99 < 0.10
+    assert bus.measured_rate_tps() > 0
+
+
+def test_metrics_bus_exact_quantiles_before_eviction():
+    from repro.io.metrics import MetricsBus
+
+    bus = MetricsBus(retain=64)
+    for i in range(10):
+        bus.record_tick(i, 1, 0.002, None, 0)
+    p50, p99 = bus.latency_quantiles_ms()
+    assert p50 == pytest.approx(2.0) and p99 == pytest.approx(2.0)
+
+
+def test_unresolved_detections_flushed_at_stop(obs_env):
+    from repro.io.metrics import MetricsBus
+
+    o = obs_env(enabled=True)
+    bus = MetricsBus()
+    bus.start()
+    bus.record_detection(epoch=1, tick_id=3, rc="rc1")
+    bus.record_detection(epoch=2, tick_id=5, rc="rc2")
+    assert bus.record_switch(4) == ["rc1"]            # resolves tick<=4
+    bus.stop()
+    assert len(bus.unresolved_detections) == 1        # rc2 never switched
+    assert bus.unresolved_detections[0][2] == 5
+    assert not bus._pending_detections                # leak flushed
+    assert o.registry.counters["bus.unresolved_detections"].value == 1
+    kinds = [e["kind"] for e in o.flight.events]
+    assert "unresolved_detections" in kinds
+
+
+# ------------------------------------------------------------- wiring -----
+
+def test_runtime_config_obs_json_roundtrip():
+    cfg = api.RuntimeConfig(obs=ObsConfig(enabled=True, trace=True,
+                                          dump_dir="/tmp/x"))
+    d = json.loads(json.dumps(cfg.to_json()))
+    back = api.RuntimeConfig.from_json(d)
+    assert isinstance(back.obs, ObsConfig)
+    assert back.obs == cfg.obs and back == cfg
+
+
+def test_runtime_end_to_end_stage_breakdown(obs_env):
+    """build_runtime with obs on: every instrumented stage appears in the
+    report's per-tick latency breakdown, bus counters match the report,
+    and the exported snapshot validates against the schema."""
+    from repro.io.sources import ReplaySource
+
+    obs_env(enabled=False)      # build_runtime installs from the config
+    batches = agg_stream(n_ticks=6)
+    cfg = api.RuntimeConfig(
+        op="count", wa=50, ws=100, wt="multi", k_virt=K, out_cap=512,
+        n_max=8, n_active=2, stash_cap=64, n_sources=N_SRC,
+        ingest_hosts=2, leaf_cap=32, root_cap=64,
+        controller="threshold", capacity_per_instance=50.0,
+        obs=ObsConfig(enabled=True, trace=True))
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=N_SRC))
+    rep = rt.run()
+    o = obs.get()
+    assert o is not None and o.cfg.trace
+    stages = set(rep.stage_latency_ms)
+    assert {"ingest.stage", "leaf.push", "root.merge", "runtime.dispatch",
+            "runtime.drain", "controller.decide"} <= stages
+    snap = o.snapshot()
+    validate_snapshot(snap)
+    assert snap["counters"]["bus.ticks"] == rep.ticks
+    assert snap["counters"]["leaf.rounds"] > 0
+    assert snap["counters"]["root.rounds"] > 0
+    kinds = {e["kind"] for e in o.flight.events}
+    assert {"tick", "leaf_push", "controller_decide"} <= kinds
+    ticks = [e for e in o.flight.events if e["kind"] == "tick"]
+    assert {"tick_id", "n_tuples", "latency_ms", "queue_depth",
+            "wmark_frontier"} <= set(ticks[0])
+
+
+def test_chaos_failure_dumps_flight_timeline(tmp_path, obs_env):
+    """The acceptance drill: a SIGKILLed process ingest leaf mid-stream
+    crashes the runtime, and the flight-recorder JSON dump contains the
+    failing tick's timeline across leaf, root/tier, runtime, and
+    controller events — with the child processes' events interleaved."""
+    from repro.ingest import LeafFailure
+    from repro.io.sources import ReplaySource
+    from repro.launch.recovery import _kill_leaf_when
+
+    obs_env(enabled=False)
+    dump_dir = tmp_path / "dump"
+    batches = agg_stream(n_ticks=12, tick=32)
+    cfg = api.RuntimeConfig(
+        op="count", wa=50, ws=100, wt="multi", k_virt=K, out_cap=512,
+        n_max=8, n_active=2, stash_cap=256, n_sources=N_SRC,
+        ingest_hosts=2, ingest_worker="process", chan_cap=2,
+        leaf_cap=128, root_cap=256,
+        checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=4,
+        controller="threshold", capacity_per_instance=1.0,
+        obs=ObsConfig(enabled=True, trace=True, dump_dir=str(dump_dir)))
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=N_SRC))
+    wd = threading.Thread(target=_kill_leaf_when, args=(rt.tier, 6),
+                          daemon=True)
+    wd.start()
+    with pytest.raises(LeafFailure):
+        rt.run()
+
+    dumps = glob.glob(str(dump_dir / "flight-*.json"))
+    assert dumps, "chaos failure produced no flight dump"
+    d = json.loads(open(dumps[0]).read())
+    assert "ingest_error" in d["reason"] or "runtime_crash" in d["reason"]
+    kinds = {e["kind"] for e in d["events"]}
+    # the four layers of the failing timeline
+    assert "leaf_push" in kinds                       # leaf tier (children)
+    assert "leaf_failure" in kinds                    # root/tier detection
+    assert "tick" in kinds                            # runtime drain loop
+    assert "controller_decide" in kinds               # control loop
+    assert "tier_snapshot" in kinds                   # checkpoint cut rode by
+    fail = [e for e in d["events"] if e["kind"] == "leaf_failure"][0]
+    assert "leaf_id" in fail and "round_id" in fail
+    # child events shipped over the channels, interleaved by wall clock
+    pids = {e["pid"] for e in d["events"]}
+    assert len(pids) >= 2 and os.getpid() in pids
+    walls = [e["wall"] for e in d["events"]]
+    assert walls == sorted(walls)                     # dump is a timeline
