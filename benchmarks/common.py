@@ -295,11 +295,27 @@ def run_recovery_bench(name: str, cfg, batches, *, mode: str = "stop",
     return rep
 
 
+def _amplified_source(src, events_per_tick: int):
+    """Detail-event pressure for the sampled variant: fire
+    ``events_per_tick`` extra flight events per batch on the ingest thread
+    — a ~10x event rate the sampler must absorb without widening the
+    overhead gate.  Only ring detail thins; every counter still counts."""
+    from repro import obs
+    for b in src:
+        for i in range(events_per_tick):
+            obs.event("synthetic_load", seq=i)
+        yield b
+
+
 def run_obs_overhead_bench(make_pipe, make_source, warm, *,
-                           queue_cap: int = 4, reps: int = 3):
-    """Observability cost gate: the identical async run under three obs
+                           queue_cap: int = 4, reps: int = 3,
+                           synthetic_events: int = 10):
+    """Observability cost gate: the identical async run under four obs
     settings — fully off (baseline), metrics+flight with tracing disabled
-    (the always-on tier, gated <2%), and full span tracing (gated <10%).
+    (the always-on tier, gated <2%), full span tracing (gated <10%), and
+    full tracing under adaptive head sampling while the source fires
+    ``synthetic_events`` extra flight events per tick (~10x the normal
+    event rate; gated <2% — sampling must make tracing always-on cheap).
 
     Each variant gets a fresh pipeline compiled outside the timed window
     (``pipe.step(warm)``) and ``reps`` full runs; best-of throughput is
@@ -307,40 +323,59 @@ def run_obs_overhead_bench(make_pipe, make_source, warm, *,
     previously installed global ``Obs`` is restored afterwards, whatever
     happens — the bench must not leave its instrumentation behind.
 
-    Returns base/metrics/trace tps, the two relative overheads, and
-    ``parity`` (exact output-set equality across all three variants — obs
-    must never perturb results)."""
+    Returns per-variant tps, the relative overheads, ``parity`` (exact
+    output-set equality across all variants — obs must never perturb
+    results), and ``counters_exact`` (``bus.ticks``/``bus.tuples`` totals
+    bit-identical between the trace and sampled runs: sampling thins
+    detail records only, never accounting)."""
     from repro import obs
     from repro.core.async_runtime import AsyncStreamRuntime
 
     prev = obs.get()
-    tps, results = {}, {}
+    tps, results, counters = {}, {}, {}
+    sampler_snap = {}
     try:
-        for name, cfg in (
-                ("off", None),
-                ("metrics", obs.ObsConfig(enabled=True, trace=False)),
-                ("trace", obs.ObsConfig(enabled=True, trace=True))):
+        for name, cfg, amplify in (
+                ("off", None, 0),
+                ("metrics", obs.ObsConfig(enabled=True, trace=False), 0),
+                ("trace", obs.ObsConfig(enabled=True, trace=True), 0),
+                ("sampled", obs.ObsConfig(
+                    enabled=True, trace=True,
+                    event_sample=1.0 / 64.0, span_sample=1.0 / 16.0,
+                    event_budget_per_s=2000.0), synthetic_events)):
             obs.set_current(obs.Obs(cfg) if cfg is not None else None)
             best = 0.0
             for _ in range(reps):
                 pipe = make_pipe()
                 pipe.step(warm)               # compile outside the window
-                rt = AsyncStreamRuntime(pipe, make_source(),
-                                        queue_cap=queue_cap)
+                src = make_source()
+                if amplify:
+                    src = _amplified_source(src, amplify)
+                rt = AsyncStreamRuntime(pipe, src, queue_cap=queue_cap)
                 rep = rt.run()
                 best = max(best, rep.throughput_tps)
             tps[name] = best
             results[name] = rt.sink.results()
+            o = obs.get()
+            if o is not None and cfg.trace:
+                counters[name] = {
+                    k: v for k, v in o.snapshot()["counters"].items()
+                    if k in ("bus.ticks", "bus.tuples")}
+                if o.sampler is not None:
+                    sampler_snap = o.sampler.snapshot()
     finally:
         obs.set_current(prev)
     base = max(tps["off"], 1e-9)
     return dict(
         base_tps=tps["off"], metrics_tps=tps["metrics"],
-        trace_tps=tps["trace"],
+        trace_tps=tps["trace"], sampled_tps=tps["sampled"],
         metrics_overhead=1.0 - tps["metrics"] / base,
         trace_overhead=1.0 - tps["trace"] / base,
+        sampled_overhead=1.0 - tps["sampled"] / base,
+        counters_exact=(counters["trace"] == counters["sampled"]),
+        sampler=sampler_snap,
         parity=(results["off"] == results["metrics"]
-                == results["trace"]))
+                == results["trace"] == results["sampled"]))
 
 
 def time_fn(fn, *args, warmup=2, iters=5):

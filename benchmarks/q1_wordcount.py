@@ -200,9 +200,11 @@ def run_obs_overhead(wc_mode: str, pair_dist: int, n_ticks: int = 32):
 
 
 def emit_obs_overhead(qname: str, ob):
-    """The gated obs-overhead row: FAIL when the tracing-disabled tier
-    costs >=2%, full tracing costs >=10%, or any variant's outputs
-    diverge (parity=False trips ``failed_rows`` by itself)."""
+    """The gated obs-overhead rows: FAIL when the tracing-disabled tier
+    costs >=2%, full tracing costs >=10%, sampled tracing under the 10x
+    event storm costs >=2%, sampling perturbs the exact counters, or any
+    variant's outputs diverge (parity=False trips ``failed_rows`` by
+    itself)."""
     fail = ""
     if ob["metrics_overhead"] >= 0.02:
         fail += " FAIL(disabled_overhead>=2%)"
@@ -214,6 +216,20 @@ def emit_obs_overhead(qname: str, ob):
          f"{ob['metrics_overhead'] * 100:+.1f}% (gate <2%), full trace "
          f"{ob['trace_overhead'] * 100:+.1f}% (gate <10%), "
          f"parity={ob['parity']}{fail}")
+    sfail = ""
+    if ob["sampled_overhead"] >= 0.02:
+        sfail += " FAIL(sampled_overhead>=2%)"
+    if not ob["counters_exact"]:
+        sfail += " FAIL(counters_diverged)"
+    ev = (ob.get("sampler") or {}).get("events", {}).get(
+        "synthetic_load", {})
+    emit(f"{qname}_obs_sampled",
+         1e6 / max(ob["sampled_tps"], 1e-9),
+         f"sampled trace under 10x event storm "
+         f"{ob['sampled_overhead'] * 100:+.1f}% vs off (gate <2%), "
+         f"kept {ev.get('kept', 0)}/{ev.get('attempts', 0)} synthetic "
+         f"events, exact counters bit-identical={ob['counters_exact']}"
+         f"{sfail}")
 
 
 def run_device_resident(n_hosts: int, n_ticks: int = 96, tick: int = 16,

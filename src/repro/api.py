@@ -198,7 +198,12 @@ def build_runtime(cfg: RuntimeConfig, source, *, pipeline=None, sink=None,
     # asks for it — callers that installed an Obs themselves (benches,
     # tests) keep theirs.
     if cfg.obs.enabled:
-        _obs.install(cfg.obs)
+        o = _obs.install(cfg.obs)
+        if cfg.obs.serve_port is not None:
+            # live scrape endpoint: serves /metrics (Prometheus text) and
+            # /snapshot (schema-v2 JSON) for the whole run; port 0 binds
+            # an ephemeral port, exposed as o.server.port
+            o.start_server()
     if pipeline is None:
         pipeline = make_pipeline(cfg)
     if restore is not None:

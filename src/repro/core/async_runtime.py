@@ -92,6 +92,12 @@ class RunReport:
     # per-stage latency breakdown {stage: {p50,p90,p99,mean,count}} in ms,
     # from span tracing when enabled (empty otherwise)
     stage_latency_ms: dict = dataclasses.field(default_factory=dict)
+    # sampled per-tuple end-to-end timelines (admission -> ... -> emit),
+    # when ObsConfig.exemplar_rate > 0 (empty otherwise)
+    exemplar_timelines: list = dataclasses.field(default_factory=list)
+    # SLO breaches observed during the run (SloBreach.to_dict() dicts),
+    # when ObsConfig.slo_rules is set (empty otherwise)
+    slo_breaches: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
         d2s = (f"{np.mean(self.detect_to_switch_ms):.1f}ms"
@@ -117,7 +123,7 @@ def _initial_frontier(pipeline, n_inputs: int) -> np.ndarray:
 
 
 def make_report(metrics: MetricsBus, reconfig_trace, switches: int,
-                queue=None) -> RunReport:
+                queue=None, slo_breaches=None) -> RunReport:
     """Assemble the RunReport from a finished run's metrics (shared by the
     async loop and the run_sync baseline)."""
     p50, p99 = metrics.latency_quantiles_ms()
@@ -136,7 +142,10 @@ def make_report(metrics: MetricsBus, reconfig_trace, switches: int,
         detect_to_switch_ticks=list(metrics.detect_to_switch_ticks),
         unresolved_detections=len(metrics.unresolved_detections),
         stage_latency_ms=({} if o is None or not o.tracer.enabled
-                          else o.tracer.stage_latency_ms()))
+                          else o.tracer.stage_latency_ms()),
+        exemplar_timelines=([] if o is None or o.timeline is None
+                            else o.timeline.completed()),
+        slo_breaches=[b.to_dict() for b in (slo_breaches or [])])
 
 
 def tick_meta(b: T.TupleBatch, tick_id: int, n_inputs: int, k_virt: int,
@@ -206,6 +215,10 @@ class AsyncStreamRuntime:
         self._fmu_shadow = np.asarray(pipeline.epoch.fmu).copy()
         self._active_shadow = np.asarray(pipeline.epoch.active).copy()
         self._ingest_error: Optional[BaseException] = None
+        # SLO breaches: _pending feeds the NEXT controller decision via
+        # LiveMetrics.slo_breaches, _all accumulates for the RunReport
+        self._pending_breaches: List = []
+        self._all_breaches: List = []
 
     # -- ingest thread ------------------------------------------------------
     def _ingest(self, max_ticks: Optional[int]):
@@ -228,6 +241,11 @@ class AsyncStreamRuntime:
                                          k_virt, frontier,
                                          with_hist=with_hist)
                         staged = self.pipeline.stage(b)   # async transfer
+                    tl = _obs.exemplars()
+                    if tl is not None:
+                        ok = np.asarray(b.valid) & ~np.asarray(b.is_control)
+                        tl.scan(np.asarray(b.source), np.asarray(b.tau),
+                                ok, "stage", tick_id=meta.tick_id)
                     self.queue.put(StagedTick(meta, staged))
         except BaseException as e:              # surfaced after join()
             self._ingest_error = e
@@ -269,6 +287,13 @@ class AsyncStreamRuntime:
             gkey = key
             metas.append(tick_meta(b, self.tick0 + i, n_inputs, k_virt,
                                    frontier, with_hist=with_hist))
+            tl = _obs.exemplars()
+            if tl is not None:
+                ok = np.asarray(b.valid) & ~np.asarray(b.is_control)
+                # bind to the super-batch's decision tick (the first tick
+                # id of the open group) — that is the id _drain sees
+                tl.scan(np.asarray(b.source), np.asarray(b.tau), ok,
+                        "stage", tick_id=metas[0].tick_id)
             group.append(b)
             if len(group) == K:
                 flush()
@@ -316,6 +341,20 @@ class AsyncStreamRuntime:
         self.metrics.record_tick(tick_id, meta.n_tuples, latency, load,
                                  self.queue.depth,
                                  n_active=int(self._active_shadow.sum()))
+        o = _obs.get()
+        if o is not None:
+            if o.timeline is not None:
+                # the tick's outputs are known delivered here: drain then
+                # emit, completing this tick's exemplar timelines
+                o.timeline.mark_tick(tick_id, "drain")
+                o.timeline.mark_tick(tick_id, "emit")
+            if o.slo is not None:
+                # evaluate on the freshest tick-latency/drain quantiles;
+                # breaches reach the controller at the next _decide
+                new = o.evaluate_slo()
+                if new:
+                    self._pending_breaches.extend(new)
+                    self._all_breaches.extend(new)
         if sw:
             self.switches += 1
             # the switch commits the LATEST rc injected by this tick; any
@@ -337,9 +376,12 @@ class AsyncStreamRuntime:
         if hint is None and len(self.metrics.records) < 2:
             return None    # no rate signal yet: a measured rate of 0.0 at
             # stream start would read as idle and trigger a bogus scale-down
+        breaches = tuple(self._pending_breaches)
+        self._pending_breaches.clear()
         snap = self.metrics.snapshot(
             rate_hint=hint, queue_depth=self.queue.depth,
-            backlog_tuples=float(self.queue.depth * meta.n_tuples))
+            backlog_tuples=float(self.queue.depth * meta.n_tuples),
+            slo_breaches=breaches)
         with _obs.span("controller.decide"):
             return self.controller.observe_live(snap)
 
@@ -386,6 +428,9 @@ class AsyncStreamRuntime:
                             self.pipeline.step_staged(
                                 item.staged, reconfig=rc,
                                 frontier=meta.frontier_before)
+                tl = _obs.exemplars()
+                if tl is not None:
+                    tl.mark_tick(meta.tick_id, "dispatch")
                 if rc is not None:
                     self.reconfig_trace.append((meta.tick_id, rc))
                     self.metrics.record_detection(rc.epoch,
@@ -426,7 +471,7 @@ class AsyncStreamRuntime:
                     reason=f"ingest_error: {self._ingest_error!r}")
             raise self._ingest_error
         return make_report(self.metrics, self.reconfig_trace, self.switches,
-                           queue=self.queue)
+                           queue=self.queue, slo_breaches=self._all_breaches)
 
 
 def run_sync(pipeline, source, sink=None, controller=None,

@@ -45,6 +45,9 @@ class LiveMetrics:
     queue_cap: int = 0
     backlog_tuples: float = 0.0              # tuples sitting in the queue
     tick_latency_s: float = 0.0
+    slo_breaches: tuple = ()                 # new SLO breaches since the
+    #                                          last decision (obs.slo
+    #                                          SloBreach instances)
 
     def load_skew(self, n_active: int = None) -> float:
         """max/mean per-instance load (>= 1): a skewed f_mu saturates its
@@ -83,6 +86,7 @@ class ThresholdController:
     lower: float = 0.45
     n_active: int = 1
     epoch: int = 0
+    slo_breaches_seen: int = 0
 
     def observe(self, rate: float) -> Optional[Reconfiguration]:
         load = rate / (self.n_active * self.capacity_per_instance)
@@ -112,6 +116,12 @@ class ThresholdController:
         pressure = 1.0
         if m.queue_cap > 0:
             pressure += m.queue_depth / m.queue_cap
+        # an SLO breach is direct evidence the objective is missed at the
+        # current capacity, whatever the raw load says: each fresh breach
+        # adds scale-up pressure (bounded — breaches are cooldown-gated)
+        if m.slo_breaches:
+            self.slo_breaches_seen += len(m.slo_breaches)
+            pressure += 0.5 * len(m.slo_breaches)
         # skew must be judged against the active set the load was MEASURED
         # under; self.n_active may already hold a not-yet-committed decision
         # (a pending switch), and mixing the two inflates skew and cascades
@@ -144,6 +154,7 @@ class PredictiveController:
     n_active: int = 1
     epoch: int = 0
     backlog: float = 0.0
+    slo_breaches_seen: int = 0
 
     def observe(self, rate: float) -> Optional[Reconfiguration]:
         work = rate * rate * self.ws_seconds + self.backlog   # comparisons/s
@@ -169,6 +180,11 @@ class PredictiveController:
         the [22] cost model (each backlogged tuple will be compared against
         the window population ~ rate * WS), then the §8.5 band applies."""
         self.backlog = m.backlog_tuples * m.rate_tps * self.ws_seconds
+        if m.slo_breaches:
+            # breaches mean the cost model under-predicted: inflate the
+            # pending-work term so the band recomputes capacity upward
+            self.slo_breaches_seen += len(m.slo_breaches)
+            self.backlog *= 1.0 + 0.5 * len(m.slo_breaches)
         rc = self.observe(m.rate_tps)
         if rc is not None:
             from repro import obs as _obs

@@ -251,6 +251,11 @@ def run_gate_loop(gate: LeafGate, recv, send, ship_obs: bool = False) -> None:
         if kind == "stop":
             break
         if kind == "tick":
+            tl = _obs.exemplars()
+            if tl is not None and msg[2] is not None:
+                s = msg[2]
+                tl.scan(s["source"], s["tau"],
+                        s["valid"] & ~s["is_control"], "leaf_push")
             with _obs.span("leaf.push"):
                 out = gate.push_round(msg[1], msg[2])
             answer(out)

@@ -424,6 +424,12 @@ class IngestTier:
             else:
                 b_np = L.batch_to_np(b)
                 self.tuples_in += self._fold_frontier(b_np)
+                tl = _obs.exemplars()
+                if tl is not None:
+                    # admission: the first stage of a sampled tuple's
+                    # end-to-end timeline (same predicate at every stage)
+                    tl.scan(b_np["source"], b_np["tau"],
+                            b_np["valid"] & ~b_np["is_control"], "admit")
                 keep = b_np["valid"]
                 leaf_of_lane = self.part.assignment[
                     np.clip(b_np["source"], 0, self.n_sources - 1)]
@@ -577,6 +583,14 @@ class IngestTier:
                 for lo in outs:            # cross-process obs piggybacks
                     if lo.obs is not None:
                         _obs.ingest_payload(lo.obs)
+                tl = _obs.exemplars()
+                if tl is not None:
+                    for lo in outs:
+                        r = lo.ready
+                        if r["tau"].shape[0]:
+                            tl.scan(r["source"], r["tau"],
+                                    r["valid"] & ~r["is_control"],
+                                    "root_merge")
                 with _obs.span("root.merge"):
                     self.root.apply_pre(rec.root_ops)
                     out = self.root.push(outs)

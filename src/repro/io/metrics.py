@@ -164,13 +164,17 @@ class MetricsBus:
 
     def snapshot(self, rate_hint: Optional[float] = None,
                  queue_depth: int = 0,
-                 backlog_tuples: float = 0.0) -> LiveMetrics:
+                 backlog_tuples: float = 0.0,
+                 slo_breaches: tuple = ()) -> LiveMetrics:
         """The controller-facing view of 'now'.  ``rate_hint`` (the offered
         rate, when the source knows it) takes precedence over the measured
         rate so closed-loop drills are deterministic; live deployments pass
         None and get the measured signal.  ``inst_load`` and
         ``n_active_observed`` come from the same record, so a load sample
-        is always judged against the active set it was measured under."""
+        is always judged against the active set it was measured under.
+        ``slo_breaches`` — new SLO-engine breaches since the last decision
+        (repro.obs.slo.SloBreach) — ride along so policies can react to
+        objective violations, not just raw load."""
         last = self.records[-1] if self.records else None
         return LiveMetrics(
             rate_tps=(rate_hint if rate_hint is not None
@@ -180,4 +184,5 @@ class MetricsBus:
             queue_depth=queue_depth,
             queue_cap=self.queue_cap,
             backlog_tuples=backlog_tuples,
-            tick_latency_s=0.0 if last is None else last.latency_s)
+            tick_latency_s=0.0 if last is None else last.latency_s,
+            slo_breaches=tuple(slo_breaches))

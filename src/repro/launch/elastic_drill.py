@@ -97,8 +97,16 @@ def main(argv=None):
         return run_drills(args, drills)
 
     from repro import obs as _obs
-    o = _obs.install(_obs.ObsConfig(enabled=True, trace=True,
-                                    dump_dir=args.obs_dump))
+    # fully-instrumented drills: tracing, sampled exemplar tuple timelines,
+    # and a deliberately-unmeetable tick-latency SLO (threshold 1 us) so
+    # the breach -> controller.observe_live -> flight-dump loop is
+    # exercised (and asserted) on every CI run of the live drill
+    o = _obs.install(_obs.ObsConfig(
+        enabled=True, trace=True, dump_dir=args.obs_dump,
+        exemplar_rate=1.0 / 8.0,
+        slo_rules=[dict(name="tick_p99", metric="bus.tick_latency_s",
+                        threshold=1e-6, quantile=0.99, window_s=30.0,
+                        min_count=4, cooldown_s=0.5)]))
     try:
         rc = run_drills(args, drills)
     except BaseException as e:
@@ -212,6 +220,33 @@ def run_drills(args, drills):
               f"latency {d2s}, queue high-water {rep.queue_high_water}")
         assert rep.switches >= 1, "the rate spike never triggered a switch"
         assert same, "live elastic run diverged from the static oracle"
+        from repro import obs as _obs
+        o = _obs.get()
+        if o is not None and o.slo is not None:
+            # the SLO loop must demonstrably close: breach events reach
+            # the controller, land in the report, and trigger a dump
+            ctrl = rt.runtime.controller
+            n_seen = getattr(ctrl, "slo_breaches_seen", 0)
+            assert n_seen >= 1, "SLO breach never reached observe_live"
+            assert rep.slo_breaches, "SLO breaches missing from RunReport"
+            if o.cfg.dump_dir:
+                import glob
+                import os
+                dumps = glob.glob(os.path.join(o.cfg.dump_dir,
+                                               "flight-slo-*.json"))
+                assert dumps, "SLO breach produced no flight dump"
+            print(f"[4] SLO loop: {len(rep.slo_breaches)} breach(es) of "
+                  f"{rep.slo_breaches[0]['rule']} fed observe_live "
+                  f"(controller saw {n_seen}) and triggered a flight dump")
+        if o is not None and o.timeline is not None:
+            tls = rep.exemplar_timelines
+            assert tls, "exemplar sampling produced no completed timelines"
+            for tl in tls:
+                walls = [w for _, w in tl["timeline"]]
+                assert walls == sorted(walls), \
+                    f"exemplar timeline not monotone: {tl}"
+            print(f"[4] exemplars: {len(tls)} completed tuple timelines, "
+                  f"all stage orders monotone")
 
     # --- hierarchical multi-host ingest ------------------------------------
     if "ingest" in drills:

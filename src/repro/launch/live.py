@@ -93,9 +93,15 @@ def make_stream(args):
 
 
 def make_obs_cfg(args) -> ObsConfig:
-    on = bool(args.trace or args.obs_export or args.flight_dump)
+    on = bool(args.trace or args.obs_export or args.flight_dump
+              or args.obs_port is not None)
     return ObsConfig(enabled=on, trace=bool(args.trace),
-                     export_dir=args.obs_export)
+                     export_dir=args.obs_export,
+                     serve_port=args.obs_port,
+                     exemplar_rate=args.exemplar_rate,
+                     event_sample=args.event_sample,
+                     span_sample=args.span_sample,
+                     event_budget_per_s=args.event_budget)
 
 
 def finish_obs(args, report) -> None:
@@ -111,6 +117,9 @@ def finish_obs(args, report) -> None:
             print(f"    {stage:<20} p50={q['p50']:8.3f} "
                   f"p90={q['p90']:8.3f} p99={q['p99']:8.3f} "
                   f"n={int(q['count'])}")
+    if getattr(report, "exemplar_timelines", None):
+        print(f"[live/obs  ] {len(report.exemplar_timelines)} exemplar "
+              f"tuple timelines completed")
     if args.obs_export:
         paths = o.export(args.obs_export)
         print(f"[live/obs  ] exported {sorted(paths.values())}")
@@ -196,6 +205,26 @@ def main(argv=None):
     ap.add_argument("--flight-dump", default=None, metavar="FILE",
                     help="dump the flight-recorder ring to FILE after the "
                          "run (and on crash); implies obs on")
+    ap.add_argument("--obs-port", type=int, default=None, metavar="PORT",
+                    help="serve /metrics (Prometheus text) and /snapshot "
+                         "(schema-v2 JSON) live during the run on this "
+                         "port (0 = ephemeral); implies obs on")
+    ap.add_argument("--exemplar-rate", type=float, default=0.0,
+                    metavar="RATE",
+                    help="sample ~RATE of tuples as end-to-end exemplar "
+                         "timelines (admission -> ... -> emit)")
+    ap.add_argument("--event-sample", type=float, default=1.0,
+                    metavar="RATE",
+                    help="keep ~RATE of flight-event detail records "
+                         "(counters stay exact; 1.0 = keep all)")
+    ap.add_argument("--span-sample", type=float, default=1.0,
+                    metavar="RATE",
+                    help="keep ~RATE of finished-span detail records "
+                         "(span histograms stay exact; 1.0 = keep all)")
+    ap.add_argument("--event-budget", type=float, default=0.0,
+                    metavar="PER_S",
+                    help="adaptive sampling: back detail rates off to stay "
+                         "under PER_S kept records/s per kind (0 = off)")
     args = ap.parse_args(argv)
 
     if args.mesh and len(jax.devices()) < args.mesh:
@@ -240,6 +269,10 @@ def main(argv=None):
     sink = CollectSink() if need_outputs else NullSink()
     rt = api.build_runtime(cfg, src, sink=sink,
                            record_tier=bool(args.ingest_hosts))
+    o = _obs.get()
+    if o is not None and o.server is not None:
+        print(f"[live/obs  ] scrape endpoint live at {o.server.url}"
+              f"/metrics (+ /snapshot)", flush=True)
     report = rt.run()
     print(f"[live/async] {report.summary()}")
     finish_obs(args, report)

@@ -25,7 +25,11 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# v1: counters/gauges/histograms.  v2 adds "sampling" (head-sampler
+# metadata) and "exemplars" (per-tuple timelines); v1 payloads still
+# validate (the new sections are optional for schema_version == 1).
+_LEGACY_SCHEMA_VERSIONS = (1,)
 
 # geometric bucket bounds: 1e-7 .. ~1.8e5, ratio 2**(1/8)  (~324 buckets)
 _RATIO = 2.0 ** 0.125
@@ -162,48 +166,107 @@ class MetricsRegistry:
             self.counter(name).inc(d)
 
     # -- export --------------------------------------------------------------
-    def snapshot(self) -> Dict:
-        """The versioned-schema metrics snapshot (see ``snapshot_schema``)."""
-        hists = {}
-        for name, h in sorted(self.histograms.items()):
-            hists[name] = {
-                "count": h.count,
-                "sum": h.sum,
-                "min": (0.0 if h.count == 0 else h.min),
-                "max": (0.0 if h.count == 0 else h.max),
-                "p50": h.quantile(0.50),
-                "p90": h.quantile(0.90),
-                "p99": h.quantile(0.99),
-            }
+    def snapshot(self, sampling: Optional[Dict] = None,
+                 exemplars: Optional[List] = None) -> Dict:
+        """The versioned-schema metrics snapshot (see ``snapshot_schema``).
+
+        Taken under the registry lock so an in-run scrape never sees a
+        torn instrument table; GIL-atomic mutators keep individual values
+        coherent and counters monotone across scrapes.  ``sampling`` /
+        ``exemplars`` are the v2 sections filled in by ``Obs.snapshot``
+        (defaults keep a bare-registry snapshot schema-valid).
+        """
+        with self._lock:
+            hists = {}
+            for name, h in sorted(self.histograms.items()):
+                hists[name] = {
+                    "count": h.count,
+                    "sum": h.sum,
+                    "min": (0.0 if h.count == 0 else h.min),
+                    "max": (0.0 if h.count == 0 else h.max),
+                    "p50": h.quantile(0.50),
+                    "p90": h.quantile(0.90),
+                    "p99": h.quantile(0.99),
+                }
+            counters = {n: c.value for n, c in sorted(self.counters.items())}
+            gauges = {n: g.value for n, g in sorted(self.gauges.items())}
         return {
             "schema_version": SCHEMA_VERSION,
             "generated_unix": time.time(),
-            "counters": {n: c.value for n, c in sorted(self.counters.items())},
-            "gauges": {n: g.value for n, g in sorted(self.gauges.items())},
+            "counters": counters,
+            "gauges": gauges,
             "histograms": hists,
+            "sampling": dict(sampling) if sampling else {},
+            "exemplars": list(exemplars) if exemplars else [],
         }
 
-    def to_prometheus(self) -> str:
+    def to_prometheus(self, sampling: Optional[Dict] = None) -> str:
         """Prometheus text exposition of the same registry state (metric
-        names sanitized: dots/dashes become underscores)."""
-        def sane(name: str) -> str:
-            return "".join(ch if (ch.isalnum() or ch == "_") else "_"
-                           for ch in name)
-
+        names sanitized; HELP strings and label values escaped per the
+        text-format spec; every family — including histogram sketches,
+        rendered as summaries — carries a ``# TYPE`` line).  ``sampling``
+        metadata (from the head sampler) renders as labeled
+        ``obs_sampled_total{kind=...,what=...}`` series."""
         lines = []
-        for name, c in sorted(self.counters.items()):
-            n = sane(name)
-            lines += [f"# TYPE {n} counter", f"{n} {c.value:g}"]
-        for name, g in sorted(self.gauges.items()):
-            n = sane(name)
-            lines += [f"# TYPE {n} gauge", f"{n} {g.value:g}"]
-        for name, h in sorted(self.histograms.items()):
-            n = sane(name)
-            lines += [f"# TYPE {n} summary",
-                      f"{n}_count {h.count}", f"{n}_sum {h.sum:g}"]
-            for q in (0.50, 0.90, 0.99):
-                lines.append(f'{n}{{quantile="{q}"}} {h.quantile(q):g}')
+        with self._lock:
+            counters = sorted((n, c.value) for n, c in self.counters.items())
+            gauges = sorted((n, g.value) for n, g in self.gauges.items())
+            hists = []
+            for name, h in sorted(self.histograms.items()):
+                hists.append((name, h.count, h.sum,
+                              [(q, h.quantile(q)) for q in (0.50, 0.90,
+                                                            0.99)]))
+        for name, v in counters:
+            n = _sane_metric_name(name)
+            lines += [f"# HELP {n} {_escape_help(f'counter {name}')}",
+                      f"# TYPE {n} counter", f"{n} {v:g}"]
+        for name, v in gauges:
+            n = _sane_metric_name(name)
+            lines += [f"# HELP {n} {_escape_help(f'gauge {name}')}",
+                      f"# TYPE {n} gauge", f"{n} {v:g}"]
+        for name, count, total, quants in hists:
+            n = _sane_metric_name(name)
+            lines += [f"# HELP {n} "
+                      f"{_escape_help(f'quantile sketch {name}')}",
+                      f"# TYPE {n} summary",
+                      f"{n}_count {count}", f"{n}_sum {total:g}"]
+            for q, qv in quants:
+                lines.append(
+                    f'{n}{{quantile="{_escape_label_value(str(q))}"}} '
+                    f"{qv:g}")
+        if sampling:
+            lines += ["# HELP obs_sampled_total exact attempt/kept totals "
+                      "per sampled kind",
+                      "# TYPE obs_sampled_total counter"]
+            for what in ("events", "spans"):
+                for kind, st in sorted(sampling.get(what, {}).items()):
+                    k = _escape_label_value(kind)
+                    w = _escape_label_value(what)
+                    lines.append(f'obs_sampled_total{{what="{w}",'
+                                 f'kind="{k}",outcome="attempted"}} '
+                                 f'{st["attempts"]:g}')
+                    lines.append(f'obs_sampled_total{{what="{w}",'
+                                 f'kind="{k}",outcome="kept"}} '
+                                 f'{st["kept"]:g}')
         return "\n".join(lines) + "\n"
+
+
+def _sane_metric_name(name: str) -> str:
+    return "".join(ch if (ch.isalnum() or ch == "_") else "_"
+                   for ch in name)
+
+
+def _escape_help(s: str) -> str:
+    """HELP-string escaping per the Prometheus text format: backslash and
+    newline only."""
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _escape_label_value(s: str) -> str:
+    """Label-value escaping per the Prometheus text format: backslash,
+    double-quote, and newline."""
+    return (s.replace("\\", "\\\\").replace('"', '\\"')
+             .replace("\n", "\\n"))
 
 
 # ------------------------------------------------------- schema contract --
@@ -213,16 +276,25 @@ _HIST_KEYS = ("count", "sum", "min", "max", "p50", "p90", "p99")
 
 def snapshot_schema() -> Dict:
     """JSON-Schema document for ``MetricsRegistry.snapshot()`` — committed
-    behavior: bump ``SCHEMA_VERSION`` on any breaking change."""
+    behavior: bump ``SCHEMA_VERSION`` on any breaking change.
+
+    v2 adds ``sampling`` (head-sampler metadata object) and ``exemplars``
+    (array of per-tuple timelines).  v1 snapshots — which lack both —
+    still validate for cross-process folding of payloads produced by
+    older children; see ``validate_snapshot``.
+    """
     num = {"type": "number"}
     return {
         "$schema": "http://json-schema.org/draft-07/schema#",
         "title": f"repro.obs metrics snapshot v{SCHEMA_VERSION}",
         "type": "object",
         "required": ["schema_version", "generated_unix", "counters",
-                     "gauges", "histograms"],
+                     "gauges", "histograms", "sampling", "exemplars"],
         "properties": {
-            "schema_version": {"type": "integer", "const": SCHEMA_VERSION},
+            "schema_version": {
+                "type": "integer",
+                "enum": sorted((*_LEGACY_SCHEMA_VERSIONS, SCHEMA_VERSION)),
+            },
             "generated_unix": num,
             "counters": {"type": "object", "additionalProperties": num},
             "gauges": {"type": "object", "additionalProperties": num},
@@ -234,6 +306,8 @@ def snapshot_schema() -> Dict:
                     "properties": {k: num for k in _HIST_KEYS},
                 },
             },
+            "sampling": {"type": "object"},
+            "exemplars": {"type": "array"},
         },
     }
 
@@ -241,18 +315,31 @@ def snapshot_schema() -> Dict:
 def validate_snapshot(snap: Dict) -> None:
     """Structural validation of a snapshot against the schema contract
     (dependency-free implementation of exactly what ``snapshot_schema``
-    declares; raises ``ValueError`` on the first violation)."""
+    declares; raises ``ValueError`` on the first violation).
+
+    Accepts the current version and the legacy v1 layout (for which the
+    v2-only ``sampling``/``exemplars`` sections are optional)."""
     if not isinstance(snap, dict):
         raise ValueError(f"snapshot must be an object, got {type(snap)}")
     for key in ("schema_version", "generated_unix", "counters", "gauges",
                 "histograms"):
         if key not in snap:
             raise ValueError(f"snapshot missing required key {key!r}")
-    if snap["schema_version"] != SCHEMA_VERSION:
-        raise ValueError(f"schema_version {snap['schema_version']!r} != "
-                         f"{SCHEMA_VERSION}")
+    version = snap["schema_version"]
+    if version != SCHEMA_VERSION and version not in _LEGACY_SCHEMA_VERSIONS:
+        raise ValueError(f"schema_version {version!r} not in "
+                         f"{(*_LEGACY_SCHEMA_VERSIONS, SCHEMA_VERSION)}")
     if not isinstance(snap["generated_unix"], (int, float)):
         raise ValueError("generated_unix must be a number")
+    if version >= 2:
+        for key in ("sampling", "exemplars"):
+            if key not in snap:
+                raise ValueError(f"v{version} snapshot missing required "
+                                 f"key {key!r}")
+    if "sampling" in snap and not isinstance(snap["sampling"], dict):
+        raise ValueError("sampling must be an object")
+    if "exemplars" in snap and not isinstance(snap["exemplars"], list):
+        raise ValueError("exemplars must be an array")
     for section in ("counters", "gauges"):
         if not isinstance(snap[section], dict):
             raise ValueError(f"{section} must be an object")

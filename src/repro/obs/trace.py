@@ -72,12 +72,16 @@ class Tracer:
     """Per-process span tracer writing into a shared MetricsRegistry."""
 
     def __init__(self, registry: MetricsRegistry, enabled: bool = True,
-                 span_cap: int = 2048):
+                 span_cap: int = 2048, sampler=None):
         self.registry = registry
         self.enabled = enabled
         self.finished: deque = deque(maxlen=span_cap)
         self._tls = threading.local()
         self._pid = os.getpid()
+        # optional HeadSampler: thins the finished-record ring only —
+        # the span.* histogram observation below always runs, so stage
+        # quantiles stay exact under sampling
+        self.sampler = sampler
 
     def _local(self):
         local = self._tls
@@ -92,6 +96,9 @@ class Tracer:
 
     def _finish(self, span: _Span, dur: float) -> None:
         self.registry.observe(f"span.{span.name}", dur)
+        if self.sampler is not None and not self.sampler.admit_span(
+                span.name):
+            return
         self.finished.append({
             "name": span.name,
             "path": span.path,
@@ -109,11 +116,17 @@ class Tracer:
             out.append(self.finished.popleft())
         return out
 
-    def ingest(self, spans: List[Dict]) -> None:
+    def ingest(self, spans: List[Dict],
+               wall_offset: float = 0.0) -> None:
         """Fold spans shipped from a child process into this tracer:
-        re-observe durations into the registry and keep the records."""
+        re-observe durations into the registry and keep the records.
+        ``wall_offset`` (parent_wall - child_wall at handshake) shifts the
+        child's ``wall_end`` stamps into the parent clock domain so merged
+        timelines sort monotonically."""
         for s in spans:
             self.registry.observe(f"span.{s['name']}", s["dur_s"])
+            if wall_offset and "wall_end" in s:
+                s["wall_end"] = s["wall_end"] + wall_offset
             self.finished.append(s)
 
     def stage_latency_ms(self) -> Dict[str, Dict[str, float]]:

@@ -139,6 +139,60 @@ def test_prometheus_text_exposition():
     assert text.endswith("\n")
 
 
+def test_prometheus_escaping_and_sampled_series():
+    """Exposition-format conformance: HELP strings escape backslash and
+    newline, label values additionally escape double-quotes, and every
+    family — including the sampling-metadata series — carries # TYPE."""
+    reg = MetricsRegistry()
+    reg.inc('weird"name\nwith\\slashes', 2)
+    sampling = {"event_sample": 1.0, "span_sample": 1.0,
+                "budget_per_s": 0.0, "adaptive": False,
+                "events": {'k"ind\n\\': {"attempts": 10, "kept": 1,
+                                         "rate": 0.1}},
+                "spans": {}}
+    text = reg.to_prometheus(sampling=sampling)
+    lines = text.splitlines()
+    help_line = next(l for l in lines if l.startswith("# HELP weird_"))
+    assert "\\n" in help_line and "\\\\" in help_line
+    typed = {l.split()[2] for l in lines if l.startswith("# TYPE")}
+    assert "obs_sampled_total" in typed
+    sampled = [l for l in lines if l.startswith("obs_sampled_total{")]
+    assert any('outcome="attempted"} 10' in l for l in sampled)
+    assert any('outcome="kept"} 1' in l for l in sampled)
+    assert any('kind="k\\"ind\\n\\\\"' in l for l in sampled)
+    # no line may contain a raw (unescaped) newline: splitlines is exact
+    assert all("\n" not in l for l in lines)
+
+
+def test_v2_snapshot_v1_legacy_and_tamper():
+    """Schema v2 adds sampling + exemplars; v1 payloads (older children)
+    still validate without them, but a v2 snapshot missing them — or any
+    unknown version — is rejected."""
+    reg = MetricsRegistry()
+    reg.inc("x")
+    reg.observe("y", 0.5)
+    snap = reg.snapshot()
+    assert snap["schema_version"] == SCHEMA_VERSION == 2
+    assert snap["sampling"] == {} and snap["exemplars"] == []
+    validate_snapshot(snap)
+    v1 = {k: v for k, v in snap.items()
+          if k not in ("sampling", "exemplars")}
+    v1["schema_version"] = 1
+    validate_snapshot(v1)                              # legacy accepted
+    bad = dict(v1)
+    bad["schema_version"] = 2
+    with pytest.raises(ValueError, match="sampling"):
+        validate_snapshot(bad)                         # v2 requires them
+    bad = dict(snap)
+    bad["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_snapshot(bad)
+    bad = dict(snap)
+    bad["exemplars"] = {"not": "an array"}
+    with pytest.raises(ValueError, match="exemplars"):
+        validate_snapshot(bad)
+
+
 # -------------------------------------------------------------- tracer ----
 
 def test_tracer_nested_spans_paths_and_quantiles():
@@ -196,6 +250,38 @@ def test_flight_ring_bounded_and_dump_format(tmp_path):
     fr_off = FlightRecorder(cap=8, enabled=False)
     fr_off.record("tick", tick_id=0)
     assert not fr_off.events
+
+
+def test_flight_cross_process_clock_normalization():
+    """The ordering fix: a child whose perf_counter epoch differs from the
+    parent's ships its perf->wall offset with its events; ingest
+    renormalizes each wall from the raw ``t``, so the merged dump is a
+    true cross-process timeline."""
+    parent = FlightRecorder(cap=32)
+    parent.record("before")
+    child = FlightRecorder(cap=32)
+    child.record("child_a")
+    child.record("child_b")
+    parent.record("after")
+    # simulate a child perf_counter epoch 500s behind whose shipped walls
+    # are garbage (as a stepping wall clock would produce): the raw t
+    # shifts, the wall is corrupt, and the shipped offset fixes both
+    skew = 500.0
+    shipped = [dict(e, t=e["t"] - skew, wall=e["t"] - skew)
+               for e in child.drain()]
+    # without renormalization the corrupt walls sort before everything
+    naive = FlightRecorder(cap=32)
+    naive.record("anchor")
+    naive.ingest([dict(e) for e in shipped])          # no offset shipped
+    kinds = [e["kind"] for e in naive.dump("naive")["events"]]
+    assert kinds[0] != "anchor"                       # corrupt order
+    # with the handshake offset the merged dump is a true timeline
+    parent.ingest(shipped, clock_offset=child.clock_offset + skew)
+    d = parent.dump("clock_test")
+    assert [e["kind"] for e in d["events"]] == [
+        "before", "child_a", "child_b", "after"]
+    walls = [e["wall"] for e in d["events"]]
+    assert walls == sorted(walls)
 
 
 # ------------------------------------------- cross-process propagation ----

@@ -1,0 +1,439 @@
+"""Live observability plane (PR-9) — scrape endpoint, sampling, exemplar
+timelines, SLO engine.
+
+The contracts under test:
+  * HeadSampler: deterministic stride admission per kind, exact
+    attempt/kept accounting, adaptive budget backoff and recovery;
+    sampling thins flight/tracer *detail* only — registry counters and
+    span histograms stay exact;
+  * ExemplarTimelines: the shared (src, tau) predicate agrees across
+    independent instances (no cross-process coordination), the
+    mark/bind/mark_tick lifecycle completes timelines in stage order,
+    child mark fragments fold with wall-offset normalization;
+  * SloEngine: windowed threshold + burn-rate rules, min_count gating,
+    per-rule cooldown; end-to-end, a breach reaches
+    ``controller.observe_live``, lands in the RunReport, and triggers a
+    flight dump;
+  * ObsServer: in-run HTTP scrape serving Prometheus text and the
+    schema-v2 JSON snapshot; concurrent scrapes mid-run are
+    lock-consistent (schema-valid, counters monotone), and the endpoint
+    survives a SIGKILLed ingest leaf (chaos) still serving valid output.
+"""
+
+import glob
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.obs import (ExemplarTimelines, HeadSampler, ObsConfig, SloEngine,
+                       SloRule)
+from repro.obs.registry import MetricsRegistry, validate_snapshot
+from repro.obs.sample import _WINDOW
+
+K = 64
+N_SRC = 4
+
+
+@pytest.fixture
+def obs_env():
+    """Install a fresh Obs for the test; always restore the previous
+    global (and stop any server the test started) afterwards."""
+    prev = obs.get()
+    made = []
+
+    def make(**kw):
+        o = obs.install(ObsConfig(**kw))
+        made.append(o)
+        return o
+
+    yield make
+    for o in made:
+        o.stop_server()
+    obs.set_current(prev)
+
+
+def agg_stream(n_ticks=6, seed=0, tick=16, n_sources=N_SRC):
+    from repro.data import datagen
+    rng = np.random.default_rng(seed)
+    return list(datagen.tweets(rng, n_ticks=n_ticks, tick=tick,
+                               words_per_tweet=3, vocab=300, k_virt=K,
+                               rate_per_tick=30, n_sources=n_sources))
+
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read()
+
+
+# --------------------------------------------------------- head sampler ---
+
+def test_head_sampler_deterministic_strides():
+    hs = HeadSampler(event_sample=0.25, span_sample=0.5,
+                     rates={"noisy": 1.0 / 8.0})
+    kept = [hs.admit_event("tick") for _ in range(100)]
+    assert kept[0] and sum(kept) == 25            # 1-in-4, head admitted
+    assert sum(hs.admit_event("noisy") for _ in range(80)) == 10
+    assert sum(hs.admit_span("leaf.push") for _ in range(10)) == 5
+    assert not any(HeadSampler(event_sample=0.0).admit_event("x")
+                   for _ in range(10))            # rate 0 drops all
+    snap = hs.snapshot()
+    assert snap["events"]["tick"] == {"attempts": 100, "kept": 25,
+                                      "rate": 0.25}
+    assert snap["events"]["noisy"]["kept"] == 10  # per-kind override
+    assert snap["adaptive"] is False
+
+
+def test_head_sampler_adaptive_backoff_and_recovery():
+    hs = HeadSampler(event_sample=1.0, budget_per_s=50.0)
+    kept = sum(hs.admit_event("storm") for _ in range(5000))
+    st = hs.snapshot()["events"]["storm"]
+    # a tight loop wildly exceeds 50 events/s: the live rate backs off
+    # below the configured ceiling, but attempts stay exactly counted
+    assert st["attempts"] == 5000 and st["kept"] == kept < 5000
+    assert st["rate"] < 1.0
+    # a long quiet window recovers the rate toward the ceiling
+    state = hs._events["storm"]
+    backed_off = state.rate
+    state.win_t0 = time.perf_counter() - 1000.0
+    state.win_n = _WINDOW - 1
+    hs.admit_event("storm")
+    assert hs._events["storm"].rate > backed_off
+
+
+def test_sampling_thins_detail_never_accounting(obs_env):
+    """The core sampling invariant: span histograms and counters are exact
+    under any sampling rate; only ring/finished-deque detail thins."""
+    o = obs_env(enabled=True, trace=True, span_sample=0.25,
+                event_sample=0.25)
+    for _ in range(40):
+        with obs.span("pipeline.step"):
+            pass
+        obs.event("tick")
+        obs.counter_inc("bus.ticks")
+    assert o.registry.histograms["span.pipeline.step"].count == 40
+    assert o.registry.counters["bus.ticks"].value == 40
+    assert len(o.tracer.finished) == 10
+    assert len([e for e in o.flight.events if e["kind"] == "tick"]) == 10
+    # the thinning is visible in the v2 snapshot's sampling section
+    snap = o.snapshot()
+    validate_snapshot(snap)
+    assert snap["sampling"]["events"]["tick"] == {
+        "attempts": 40, "kept": 10, "rate": 0.25}
+
+
+# ------------------------------------------------------------ exemplars ---
+
+def test_exemplar_timeline_lifecycle_and_shipping():
+    clk = [0.0]
+    parent = ExemplarTimelines(rate=0.5, clock=lambda: clk[0])
+    child = ExemplarTimelines(rate=0.5, clock=lambda: clk[0])
+    # the predicate is pure (src, tau) arithmetic: independent instances
+    # (i.e. processes) agree with no coordination
+    for src in range(4):
+        for tau in range(32):
+            assert parent.is_exemplar(src, tau) == child.is_exemplar(src,
+                                                                     tau)
+    srcs = np.arange(8, dtype=np.int64)
+    taus = 3 * np.arange(8, dtype=np.int64)
+    hits = [(int(s), int(t)) for s, t in zip(srcs, taus)
+            if parent.is_exemplar(int(s), int(t))]
+    assert hits
+    parent.scan(srcs, taus, np.ones(8, bool), "admit")
+    assert len(parent._open) == len(hits)
+    # child marks the same tuples at its own stage, ships fragments
+    for s, t in hits:
+        child.mark(s, t, "leaf_push", wall=100.0)
+    frags = child.drain_marks()
+    assert frags and not child._open
+    parent.ingest_marks(frags, wall_offset=-99.5)     # child wall -> 0.5
+    # runtime binds the tick, then tick-granular stages complete it
+    for s, t in hits:
+        parent.bind_tick(s, t, 7)
+    clk[0] = 1.0
+    parent.mark_tick(7, "drain")
+    clk[0] = 2.0
+    parent.mark_tick(7, "emit")
+    done = parent.completed()
+    assert len(done) == len(hits)
+    for tl in done:
+        stages = [s for s, _ in tl["timeline"]]
+        walls = [w for _, w in tl["timeline"]]
+        assert stages == ["admit", "leaf_push", "drain", "emit"]
+        assert walls == sorted(walls) == [0.0, 0.5, 1.0, 2.0]
+    # snapshot marks completion; equal walls fall back to stage rank
+    assert all(tl["complete"] for tl in parent.snapshot())
+    tie = ExemplarTimelines(rate=1.0, clock=lambda: 5.0)
+    tie.mark(0, 0, "dispatch", wall=5.0)
+    tie.mark(0, 0, "stage", wall=5.0)
+    tie.bind_tick(0, 0, 1)
+    tie.mark_tick(1, "emit", wall=5.0)
+    assert [s for s, _ in tie.completed()[0]["timeline"]] == [
+        "stage", "dispatch", "emit"]
+
+
+def test_exemplar_timelines_end_to_end(obs_env):
+    """A real tiered run with exemplar_rate on: completed per-tuple
+    timelines cross admission -> leaf push -> root merge -> stage ->
+    dispatch -> drain -> emit in monotone wall order and surface in the
+    RunReport and the v2 snapshot."""
+    from repro.io.sources import ReplaySource
+
+    obs_env(enabled=False)          # build_runtime installs from config
+    batches = agg_stream(n_ticks=6)
+    cfg = api.RuntimeConfig(
+        op="count", wa=50, ws=100, wt="multi", k_virt=K, out_cap=512,
+        n_max=8, n_active=2, stash_cap=64, n_sources=N_SRC,
+        ingest_hosts=2, leaf_cap=32, root_cap=64,
+        obs=ObsConfig(enabled=True, trace=False, exemplar_rate=0.25))
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=N_SRC))
+    rep = rt.run()
+    o = obs.get()
+    tls = rep.exemplar_timelines
+    assert tls, "no exemplar timelines completed"
+    seen = set()
+    for tl in tls:
+        assert o.timeline.is_exemplar(tl["src"], tl["tau"])
+        walls = [w for _, w in tl["timeline"]]
+        assert walls == sorted(walls)
+        seen |= {s for s, _ in tl["timeline"]}
+    assert {"admit", "leaf_push", "root_merge", "stage", "dispatch",
+            "drain", "emit"} <= seen
+    snap = o.snapshot()
+    validate_snapshot(snap)
+    assert any(e.get("complete") for e in snap["exemplars"])
+
+
+# ----------------------------------------------------------- SLO engine ---
+
+def test_slo_threshold_rule_breach_and_cooldown():
+    reg = MetricsRegistry()
+    eng = SloEngine([SloRule(name="p99", metric="lat", threshold=1e-3,
+                             quantile=0.99, window_s=30.0, min_count=8,
+                             cooldown_s=5.0)])
+    # under min_count: no evaluation at all
+    for _ in range(4):
+        reg.observe("lat", 0.5)
+    assert eng.evaluate(reg, now=1000.0) == []
+    for _ in range(8):
+        reg.observe("lat", 0.5)
+    b = eng.evaluate(reg, now=1001.0)
+    assert len(b) == 1 and b[0].rule == "p99" and b[0].value > 1e-3
+    assert b[0].to_dict()["metric"] == "lat"
+    # still breaching, but inside the cooldown window
+    for _ in range(8):
+        reg.observe("lat", 0.5)
+    assert eng.evaluate(reg, now=1002.0) == []
+    # past the cooldown it fires again
+    for _ in range(8):
+        reg.observe("lat", 0.5)
+    assert len(eng.evaluate(reg, now=1010.0)) == 1
+    assert eng.total_breaches == 2
+    assert eng.snapshot()["p99"]["breaches"] == 2
+
+
+def test_slo_burn_rate_rule_and_healthy_metric():
+    reg = MetricsRegistry()
+    eng = SloEngine([
+        SloRule(name="burn", metric="lat", threshold=1e-2,
+                kind="burn_rate", budget=0.10, burn_limit=1.0,
+                window_s=30.0, min_count=10, cooldown_s=0.0),
+        SloRule(name="quiet", metric="lat", threshold=10.0,
+                quantile=0.99, min_count=10, cooldown_s=0.0)])
+    # 50% of observations violate a 10% budget: burn rate 5 >= limit 1;
+    # the healthy threshold rule on the same metric stays silent
+    for i in range(20):
+        reg.observe("lat", 1.0 if i % 2 else 1e-4)
+    b = eng.evaluate(reg, now=2000.0)
+    assert [x.rule for x in b] == ["burn"]
+    assert b[0].kind == "burn_rate" and b[0].value >= 1.0
+    # all-healthy observations: no breach even past cooldown
+    reg2 = MetricsRegistry()
+    for _ in range(20):
+        reg2.observe("lat", 1e-4)
+    eng2 = SloEngine([SloRule(name="burn", metric="lat", threshold=1e-2,
+                              kind="burn_rate", budget=0.10,
+                              min_count=10, cooldown_s=0.0)])
+    assert eng2.evaluate(reg2, now=2000.0) == []
+
+
+def test_slo_breach_reaches_controller_report_and_dump(tmp_path, obs_env):
+    """End-to-end acceptance: an unmeetable tick-latency SLO breaches
+    during a controller run; the breach reaches observe_live (counted +
+    pressure applied), lands in RunReport.slo_breaches, is mirrored as an
+    unsampled flight event + counters, and triggers a flight-slo dump."""
+    from repro.io.sources import ReplaySource
+
+    obs_env(enabled=False)
+    dump_dir = tmp_path / "dump"
+    batches = agg_stream(n_ticks=10)
+    cfg = api.RuntimeConfig(
+        op="count", wa=50, ws=100, wt="multi", k_virt=K, out_cap=512,
+        n_max=8, n_active=2, stash_cap=64, n_sources=N_SRC,
+        controller="threshold", capacity_per_instance=5000.0,
+        obs=ObsConfig(enabled=True, trace=False, dump_dir=str(dump_dir),
+                      event_sample=0.5,   # breach events are never sampled
+                      slo_rules=[dict(name="tick_p99",
+                                      metric="bus.tick_latency_s",
+                                      threshold=1e-9, quantile=0.99,
+                                      window_s=30.0, min_count=2,
+                                      cooldown_s=0.0)]))
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=N_SRC))
+    rep = rt.run()
+    o = obs.get()
+    assert rt.runtime.controller.slo_breaches_seen >= 1
+    assert rep.slo_breaches and rep.slo_breaches[0]["rule"] == "tick_p99"
+    assert o.registry.counters["slo.breaches"].value >= 1
+    assert o.registry.counters["slo.breach.tick_p99"].value >= 1
+    n_breach_events = len([e for e in o.flight.events
+                           if e["kind"] == "slo_breach"])
+    assert n_breach_events == int(
+        o.registry.counters["slo.breaches"].value)    # unsampled
+    dumps = glob.glob(str(dump_dir / "flight-slo-*.json"))
+    assert dumps, "SLO breach produced no flight dump"
+    d = json.loads(open(dumps[0]).read())
+    assert d["reason"].startswith("slo_breach:tick_p99")
+    assert any(e["kind"] == "slo_breach" for e in d["events"])
+
+
+# ------------------------------------------------------- scrape endpoint --
+
+def test_scrape_endpoint_serves_prom_and_v2_snapshot(obs_env):
+    o = obs_env(enabled=True, trace=True, event_sample=0.5,
+                exemplar_rate=1.0)
+    o.registry.inc("bus.ticks", 5)
+    with obs.span("root.merge"):
+        pass
+    obs.event("tick", tick_id=0)
+    o.start_server(port=0)
+    assert o.server is not None and o.server.port != 0
+    url = o.server.url
+    status, ctype, body = _get(url + "/metrics")
+    text = body.decode()
+    assert status == 200 and "version=0.0.4" in ctype
+    assert "bus_ticks 5" in text and "# TYPE bus_ticks counter" in text
+    assert "obs_sampled_total{" in text               # sampler metadata
+    assert text.endswith("\n")
+    status, ctype, body = _get(url + "/snapshot")
+    assert status == 200 and "application/json" in ctype
+    snap = json.loads(body)
+    validate_snapshot(snap)
+    assert snap["schema_version"] == 2
+    assert snap["counters"]["bus.ticks"] == 5
+    assert snap["sampling"]["events"]["tick"]["attempts"] == 1
+    assert _get(url + "/metrics.json")[0] == 200      # alias
+    assert _get(url + "/healthz")[2] == b"ok\n"
+    with pytest.raises(urllib.error.HTTPError):
+        _get(url + "/nope")
+    # the served port is itself a gauge, and start is idempotent
+    assert o.registry.gauges["obs.serve_port"].value == o.server.port
+    assert o.start_server(port=0) is o.server
+    o.stop_server()
+    assert o.server is None
+
+
+def test_concurrent_scrapes_mid_run_are_consistent(obs_env):
+    """Thread hammering /snapshot while a run mutates the registry: every
+    response is schema-valid and per-thread bus.ticks never decreases
+    (the snapshot is taken under the registry lock)."""
+    from repro.io.sources import ReplaySource
+
+    obs_env(enabled=False)
+    batches = agg_stream(n_ticks=10, tick=32)
+    cfg = api.RuntimeConfig(
+        op="count", wa=50, ws=100, wt="multi", k_virt=K, out_cap=512,
+        n_max=8, n_active=2, stash_cap=64, n_sources=N_SRC,
+        controller="threshold", capacity_per_instance=50.0,
+        obs=ObsConfig(enabled=True, trace=True, serve_port=0))
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=N_SRC))
+    o = obs.get()
+    url = o.server.url
+    stop = threading.Event()
+    errors, series = [], [[] for _ in range(3)]
+
+    def scraper(idx):
+        while not stop.is_set():
+            try:
+                snap = json.loads(_get(url + "/snapshot")[2])
+                validate_snapshot(snap)
+                series[idx].append(snap["counters"].get("bus.ticks", 0))
+                prom = _get(url + "/metrics")[2].decode()
+                assert prom.endswith("\n")
+            except Exception as e:                    # pragma: no cover
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=scraper, args=(i,), daemon=True)
+               for i in range(3)]
+    for th in threads:
+        th.start()
+    rep = rt.run()
+    time.sleep(0.05)                # a few post-run scrapes
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+    assert not errors, errors
+    scraped = [v for s in series for v in s]
+    assert scraped, "no scrape completed during the run"
+    for s in series:
+        assert s == sorted(s), "bus.ticks went backwards mid-scrape"
+    assert max(scraped) <= rep.ticks
+    o.stop_server()
+
+
+def test_scrape_survives_sigkilled_leaf_chaos(tmp_path, obs_env):
+    """Chaos case: an ingest leaf is SIGKILLed mid-run while a scraper
+    hammers the endpoint.  The runtime crashes (as designed), but every
+    scrape that completed is schema-valid and the endpoint still serves
+    consistent output after the crash."""
+    from repro.ingest import LeafFailure
+    from repro.io.sources import ReplaySource
+    from repro.launch.recovery import _kill_leaf_when
+
+    obs_env(enabled=False)
+    batches = agg_stream(n_ticks=12, tick=32)
+    cfg = api.RuntimeConfig(
+        op="count", wa=50, ws=100, wt="multi", k_virt=K, out_cap=512,
+        n_max=8, n_active=2, stash_cap=256, n_sources=N_SRC,
+        ingest_hosts=2, ingest_worker="process", chan_cap=2,
+        leaf_cap=128, root_cap=256,
+        obs=ObsConfig(enabled=True, trace=True, serve_port=0,
+                      dump_dir=str(tmp_path / "dump")))
+    rt = api.build_runtime(cfg, ReplaySource(batches, n_inputs=N_SRC))
+    o = obs.get()
+    url = o.server.url
+    stop = threading.Event()
+    snaps, errors = [], []
+
+    def scraper():
+        while not stop.is_set():
+            try:
+                snap = json.loads(_get(url + "/snapshot")[2])
+                validate_snapshot(snap)
+                snaps.append(snap)
+            except Exception as e:                    # pragma: no cover
+                errors.append(e)
+                return
+
+    th = threading.Thread(target=scraper, daemon=True)
+    th.start()
+    wd = threading.Thread(target=_kill_leaf_when, args=(rt.tier, 6),
+                          daemon=True)
+    wd.start()
+    with pytest.raises(LeafFailure):
+        rt.run()
+    stop.set()
+    th.join(timeout=10)
+    assert not errors, errors
+    assert snaps, "no scrape completed"
+    # the endpoint outlives the crashed run: one more consistent scrape
+    snap = json.loads(_get(url + "/snapshot")[2])
+    validate_snapshot(snap)
+    assert snap["counters"]["bus.ticks"] >= snaps[-1]["counters"].get(
+        "bus.ticks", 0)
+    o.stop_server()
