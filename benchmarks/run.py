@@ -76,9 +76,9 @@ def main(argv=None) -> None:
     from benchmarks import common
     from benchmarks import (kernels_bench, q1_wordcount, q2_forward,
                             q3_scalejoin, q4_reconfig, q5_elastic_stress,
-                            q6_nyse)
+                            q6_nyse, q7_serving)
     mods = (q1_wordcount, q2_forward, q3_scalejoin, q4_reconfig,
-            q5_elastic_stress, q6_nyse, kernels_bench)
+            q5_elastic_stress, q6_nyse, q7_serving, kernels_bench)
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}
         names = {m.__name__.split(".")[-1] for m in mods}

@@ -66,8 +66,14 @@ class RuntimeConfig:
     # -- runtime -----------------------------------------------------------
     queue_cap: int = 4
     super_batch: int = 1
-    controller: str = "none"       # none | threshold | predictive
+    controller: str = "none"       # none | threshold | predictive | slo
     capacity_per_instance: float = 4000.0
+    # -- serving tier ------------------------------------------------------
+    # non-None switches the pipeline to the elastic LLM serving tier: the
+    # operator is continuous-batching decode, sigma is the KV slot pool,
+    # and scale-up/down is the f_mu rewrite.  Pairs with controller="slo".
+    serving: Optional[Any] = None  # ServingConfig | dict
+    slo_target_p99_ms: float = 50.0
     # -- fault tolerance ---------------------------------------------------
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0      # pipeline ticks between snapshots
@@ -82,6 +88,9 @@ class RuntimeConfig:
         # JSON round-trips (manifest restore) hand obs back as a plain dict
         if isinstance(self.obs, dict):
             self.obs = ObsConfig.from_dict(self.obs)
+        if isinstance(self.serving, dict):
+            from repro.serving import ServingConfig
+            self.serving = ServingConfig.from_dict(self.serving)
 
     @property
     def effective_max_leaves(self) -> int:
@@ -115,6 +124,11 @@ def make_op(cfg: RuntimeConfig):
 
 def make_pipeline(cfg: RuntimeConfig):
     from repro.core.runtime import MeshPipeline, VSNPipeline
+    if cfg.serving is not None:
+        from repro.serving import build_serving_pipeline
+        return build_serving_pipeline(cfg.serving,
+                                      n_inputs=max(cfg.n_sources, 1),
+                                      n_active=cfg.n_active)
     op = make_op(cfg)
     if cfg.mesh_devices:
         from repro.launch.mesh import make_stream_mesh
@@ -132,6 +146,15 @@ def make_controller(cfg: RuntimeConfig):
                                        ThresholdController)
     if cfg.controller == "none":
         return None
+    if cfg.controller == "slo":
+        from repro.serving import SloServingController
+        if cfg.serving is None:
+            raise ValueError('controller="slo" requires a serving config')
+        # the serving pipeline's k_virt is the slot count, its replica
+        # ceiling is the serving tier's instance count
+        return SloServingController(
+            n_max=cfg.serving.n_instances, k_virt=cfg.serving.n_slots,
+            target_p99_ms=cfg.slo_target_p99_ms, n_active=cfg.n_active)
     if cfg.controller == "threshold":
         return ThresholdController(
             n_max=cfg.n_max, k_virt=cfg.k_virt,
@@ -197,6 +220,9 @@ def build_runtime(cfg: RuntimeConfig, source, *, pipeline=None, sink=None,
     # Obs from their constructors onward.  Only install when the config
     # asks for it — callers that installed an Obs themselves (benches,
     # tests) keep theirs.
+    if cfg.serving is not None and cfg.checkpoint_dir:
+        raise ValueError(
+            "serving tier has no checkpoint/restore support yet")
     if cfg.obs.enabled:
         o = _obs.install(cfg.obs)
         if cfg.obs.serve_port is not None:

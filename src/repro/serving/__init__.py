@@ -1,0 +1,19 @@
+"""Elastic LLM serving tier on the VSN slot pool.
+
+``kv_pool`` holds the continuous-batching engine + the slot pool whose
+ownership table is the paper's ``f_mu``; ``stream`` promotes the engine
+into the streaming stack (requests as tuples, ``AsyncStreamRuntime`` /
+``IngestTier`` compatible pipeline, SLO-driven controller policy).
+"""
+
+from repro.serving.kv_pool import (Request, ServingEngine, SlotPool,
+                                   reference_decode)
+from repro.serving.stream import (RequestSource, ServingConfig,
+                                  ServingPipeline, SloServingController,
+                                  build_serving_pipeline)
+
+__all__ = [
+    "Request", "ServingEngine", "SlotPool", "reference_decode",
+    "RequestSource", "ServingConfig", "ServingPipeline",
+    "SloServingController", "build_serving_pipeline",
+]

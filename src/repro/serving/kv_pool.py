@@ -9,19 +9,26 @@ comparison, migrates the slot's KV to its new owner — GBs per reconfig).
 
 The engine implements continuous batching as a stream operator: requests
 are tuples (tau = arrival time), admission is the windowed batch assembly,
-and per-tick the active slots advance one decode step.
+and per-tick the active slots advance one decode step.  Admission prefills
+the whole prompt in one forward (the first output token is the argmax of
+the prefill's final logits); the decode round gathers the active slot set
+into one power-of-two-bucketed batch and advances every running request
+with a single jitted call — per-slot positions via vmap, so slots at
+different depths share the executable.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import elastic
+from repro import obs as _obs
 from repro.models import model as M, transformer
 from repro.models.config import ModelConfig
 
@@ -31,9 +38,11 @@ class Request:
     uid: int
     prompt: np.ndarray           # token ids
     max_new: int
-    arrived: int                 # tau
+    arrived: int = 0             # tau
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    admitted_step: int = -1
+    finished_step: int = -1
 
 
 @dataclasses.dataclass
@@ -49,6 +58,7 @@ class SlotPool:
             self.cfg, self.n_slots, self.max_seq)
         self.free = list(range(self.n_slots))
         self.pos = np.zeros((self.n_slots,), np.int32)
+        self.n_active = self.n_instances
         self.fmu = np.arange(self.n_slots, dtype=np.int32) % self.n_instances
         self.active = np.ones((self.n_instances,), bool)
         self.kv_bytes_moved = 0   # SN baseline counter
@@ -58,6 +68,20 @@ class SlotPool:
 
     def release(self, slot: int):
         self.pos[slot] = 0
+        # a recycled slot must not leak the previous occupant: recurrent
+        # state (SSM/RWKV wkv, shift, ssm state) feeds straight into the
+        # next request's first step, so it MUST be zeroed; the KV cache is
+        # zeroed too — positions past ``pos`` are causally masked, so this
+        # half is hygiene, but it keeps a freed slot bit-identical to a
+        # fresh one (the engine-vs-reference parity contract).
+        if self.states is not None:
+            self.states = jax.tree.map(
+                lambda a: a.at[:, slot:slot + 1].set(
+                    jnp.zeros((), a.dtype)), self.states)
+        if self.caches is not None:
+            self.caches = jax.tree.map(
+                lambda a: a.at[:, slot:slot + 1].set(
+                    jnp.zeros((), a.dtype)), self.caches)
         self.free.append(slot)
 
     def slot_bytes(self) -> int:
@@ -67,87 +91,250 @@ class SlotPool:
                 if leaf.ndim > 1 else 0
         return per_slot
 
+    def occupied(self) -> List[int]:
+        free = set(self.free)
+        return [s for s in range(self.n_slots) if s not in free]
+
     # ---- elasticity -------------------------------------------------------
     def reconfigure_vsn(self, n_active: int) -> int:
         """VSN: remap slot ownership; zero KV movement.  Returns bytes."""
         self.active[:] = False
         self.active[:n_active] = True
-        self.fmu = np.arange(self.n_slots, dtype=np.int32) % max(n_active, 1)
+        self.n_active = max(n_active, 1)
+        self.fmu = np.arange(self.n_slots, dtype=np.int32) % self.n_active
         return self.fmu.nbytes + self.active.nbytes
 
     def reconfigure_sn(self, n_active: int) -> int:
-        """SN baseline: slots whose owner changed ship their KV state."""
+        """SN baseline: slots whose owner changed ship their KV state.
+        The shipped bytes are *materialized* (device -> host -> device round
+        trip of the moved slots' caches), so the measured reconfiguration
+        latency reflects a real migration, not just a counter."""
         old = self.fmu.copy()
-        moved_bytes = 0
         self.reconfigure_vsn(n_active)
-        moved = (old != self.fmu) & ~np.isin(np.arange(self.n_slots),
-                                             self.free)
-        moved_bytes = int(moved.sum()) * self.slot_bytes()
+        # free slots hold no live state and never move; membership via a
+        # set keeps this O(slots), not O(slots * free)
+        free = set(self.free)
+        moved = [s for s in range((self.n_slots))
+                 if old[s] != self.fmu[s] and s not in free]
+        moved_bytes = len(moved) * self.slot_bytes()
+        if moved:
+            idx = np.asarray(moved, np.int32)
+            for tree_name in ("caches", "states"):
+                tree = getattr(self, tree_name)
+                if tree is None:
+                    continue
+                hostcopy = jax.tree.map(
+                    lambda a: np.asarray(a[:, idx]), tree)   # "send"
+                setattr(self, tree_name, jax.tree.map(       # "receive"
+                    lambda a, h: a.at[:, idx].set(jnp.asarray(h)),
+                    tree, hostcopy))
         self.kv_bytes_moved += moved_bytes
         return moved_bytes
+
+
+def _make_prefill(cfg: ModelConfig, chunk: int):
+    """One compiled prefill-into-slot: run the whole prompt through the
+    forward, write the slot's caches/state back in place, and return the
+    argmax of the final-position logits — the request's FIRST output token
+    (re-feeding the last prompt token would double-feed it; the old
+    per-token admission loop had exactly that bug)."""
+
+    def pre(params, caches, states, slot, toks):
+        # toks: i32[1, S]; slot: traced scalar -> dynamic slice
+        c1 = None if caches is None else jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            caches)
+        s1 = None if states is None else jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            states)
+        logits, c1, s1 = M.prefill_with_cache(params, toks, c1, s1,
+                                              cfg=cfg, chunk=chunk)
+        if caches is not None:
+            caches = jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                    a, b.astype(a.dtype), slot, axis=1), caches, c1)
+        if states is not None:
+            states = jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                    a, b.astype(a.dtype), slot, axis=1), states, s1)
+        return jnp.argmax(logits[0]).astype(jnp.int32), caches, states
+
+    return jax.jit(pre, donate_argnums=(1, 2))
+
+
+def _make_decode(cfg: ModelConfig, chunk: int):
+    """One compiled decode round over a gathered slot batch.
+
+    ``idx`` holds the active slots' ids (padded to the bucket size with
+    ``n_slots`` — out of bounds, so gathers clamp harmlessly and the
+    write-back scatter drops the pad lanes).  Per-lane positions via vmap:
+    every lane attends/advances at its own depth, one executable per
+    bucket size instead of one dispatch per request per tick."""
+
+    def one(params, c, s, tok, pos):
+        # one lane: c/s leaves have the slot axis stripped by vmap
+        c1 = None if c is None else jax.tree.map(lambda a: a[:, None], c)
+        s1 = None if s is None else jax.tree.map(lambda a: a[:, None], s)
+        logits, c1, s1 = M.decode_step(params, c1, s1, tok[None], pos,
+                                       cfg=cfg, chunk=chunk)
+        c1 = None if c1 is None else jax.tree.map(lambda a: a[:, 0], c1)
+        s1 = None if s1 is None else jax.tree.map(lambda a: a[:, 0], s1)
+        return jnp.argmax(logits[0]).astype(jnp.int32), c1, s1
+
+    vdec = jax.vmap(one, in_axes=(None, 1, 1, 0, 0), out_axes=(0, 1, 1))
+
+    def step(params, caches, states, idx, tokens, pos):
+        gc = None if caches is None else jax.tree.map(
+            lambda a: a[:, idx], caches)
+        gs = None if states is None else jax.tree.map(
+            lambda a: a[:, idx], states)
+        toks, nc, ns = vdec(params, gc, gs, tokens, pos)
+        if caches is not None:
+            caches = jax.tree.map(
+                lambda a, b: a.at[:, idx].set(b.astype(a.dtype)), caches, nc)
+        if states is not None:
+            states = jax.tree.map(
+                lambda a, b: a.at[:, idx].set(b.astype(a.dtype)), states, ns)
+        return toks, caches, states
+
+    return jax.jit(step, donate_argnums=(1, 2))
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n (capped): bounds the compiled-shape count
+    of the gathered decode to log2(n_slots) executables."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 class ServingEngine:
     """Continuous batching driver over a SlotPool."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
-                 max_seq: int, n_instances: int = 1, greedy: bool = True):
+                 max_seq: int, n_instances: int = 1, greedy: bool = True,
+                 chunk: int = 1024):
         self.cfg, self.params = cfg, params
         self.pool = SlotPool(cfg, n_slots, max_seq, n_instances)
-        self.waiting: List[Request] = []
+        self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}
         self.greedy = greedy
-        self._decode = jax.jit(
-            lambda p, c, s, t, pos: M.decode_step(p, c, s, t, pos, cfg=cfg))
+        self._prefill = _make_prefill(cfg, chunk)
+        self._decode = _make_decode(cfg, chunk)
         self.steps = 0
+        self.tokens_out = 0
+        self.requests_done = 0
 
     def submit(self, req: Request):
         self.waiting.append(req)
 
-    def _admit(self):
+    def _admit(self, done: List[Request]):
+        pool = self.pool
         while self.waiting:
-            slot = self.pool.alloc()
+            slot = pool.alloc()
             if slot is None:
                 return
-            req = self.waiting.pop(0)
+            req = self.waiting.popleft()
             req.slot = slot
-            # prefill token-by-token through the decode path (single code
-            # path; a bulk prefill_with_cache fast path exists for batch=1)
-            for i, t in enumerate(req.prompt):
-                self._step_slot(req, int(t))
-            self.running[req.uid] = req
+            req.admitted_step = self.steps
+            assert len(req.prompt) + req.max_new <= pool.max_seq, (
+                "request does not fit the slot sequence budget")
+            with _obs.span("serve.prefill"):
+                toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+                first, pool.caches, pool.states = self._prefill(
+                    self.params, pool.caches, pool.states,
+                    jnp.int32(slot), toks)
+                first = int(first)
+            pool.pos[slot] = len(req.prompt)
+            req.out.append(first)
+            self.tokens_out += 1
+            if len(req.out) >= req.max_new:     # max_new == 1: done at admit
+                self._finish(req, done)
+            else:
+                self.running[req.uid] = req
 
-    def _step_slot(self, req: Request, token: int):
-        slot = req.slot
-        caches, states = self.pool.caches, self.pool.states
-        one = lambda a: a[:, slot:slot + 1] if a is not None else None
-        c1 = jax.tree.map(lambda a: a[:, slot:slot + 1], caches) \
-            if caches is not None else None
-        s1 = jax.tree.map(lambda a: a[:, slot:slot + 1], states) \
-            if states is not None else None
-        tok = jnp.asarray([token], jnp.int32)
-        logits, c1, s1 = self._decode(self.params, c1, s1, tok,
-                                      jnp.int32(self.pool.pos[slot]))
-        if caches is not None:
-            self.pool.caches = jax.tree.map(
-                lambda a, b: a.at[:, slot:slot + 1].set(b), caches, c1)
-        if states is not None:
-            self.pool.states = jax.tree.map(
-                lambda a, b: a.at[:, slot:slot + 1].set(b), states, s1)
-        self.pool.pos[slot] += 1
-        return int(jnp.argmax(logits[0]))
+    def _finish(self, req: Request, done: List[Request]):
+        req.finished_step = self.steps
+        self.running.pop(req.uid, None)
+        self.pool.release(req.slot)
+        self.requests_done += 1
+        done.append(req)
 
     def tick(self) -> List[Request]:
         """One decode round over all running requests; returns finished."""
-        self._admit()
-        done = []
-        for req in list(self.running.values()):
-            last = req.out[-1] if req.out else int(req.prompt[-1])
-            nxt = self._step_slot(req, last)
-            req.out.append(nxt)
-            if len(req.out) >= req.max_new:
-                done.append(req)
-                del self.running[req.uid]
-                self.pool.release(req.slot)
+        done: List[Request] = []
+        self._admit(done)
+        if self.running:
+            pool = self.pool
+            reqs = list(self.running.values())
+            k = _bucket(len(reqs), pool.n_slots)
+            idx = np.full((k,), pool.n_slots, np.int32)     # OOB pad lanes
+            tokens = np.zeros((k,), np.int32)
+            pos = np.zeros((k,), np.int32)
+            for i, r in enumerate(reqs):
+                idx[i] = r.slot
+                tokens[i] = r.out[-1]
+                pos[i] = pool.pos[r.slot]
+            with _obs.span("serve.decode"):
+                toks, pool.caches, pool.states = self._decode(
+                    self.params, pool.caches, pool.states,
+                    jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
+                toks = np.asarray(toks)         # sync: latency is real
+            for i, req in enumerate(reqs):
+                req.out.append(int(toks[i]))
+                pool.pos[req.slot] += 1
+                self.tokens_out += 1
+                if len(req.out) >= req.max_new:
+                    self._finish(req, done)
         self.steps += 1
         return done
+
+    # ---- elasticity -------------------------------------------------------
+    def reconfigure(self, n_active: int, mode: str = "vsn"):
+        """Apply a replica-count change as the paper's f_mu rewrite (VSN)
+        or the SN migration baseline.  Returns (kv_bytes_moved, wall_ms)."""
+        t0 = time.perf_counter()
+        with _obs.span("serve.reconfig"):
+            if mode == "vsn":
+                self.pool.reconfigure_vsn(n_active)
+                moved = 0
+            elif mode == "sn":
+                moved = self.pool.reconfigure_sn(n_active)
+                jax.block_until_ready(
+                    jax.tree.leaves((self.pool.caches, self.pool.states)))
+            else:
+                raise ValueError(f"unknown reconfig mode {mode!r}")
+        ms = (time.perf_counter() - t0) * 1e3
+        _obs.event("serve_reconfig", mode=mode, n_active=int(n_active),
+                   kv_bytes_moved=int(moved), ms=ms)
+        return moved, ms
+
+    def inst_load(self) -> np.ndarray:
+        """Active decode slots per instance under the current f_mu."""
+        load = np.zeros((self.pool.n_instances,), np.int64)
+        slots = [r.slot for r in self.running.values()]
+        if slots:
+            np.add.at(load, self.pool.fmu[np.asarray(slots)], 1)
+        return load
+
+
+def reference_decode(cfg: ModelConfig, params, prompt, max_new: int,
+                     max_seq: int, chunk: int = 1024) -> List[int]:
+    """Straight-line batch-1 greedy decode: fresh caches, one bulk prefill,
+    then token-by-token.  The engine's per-request output must match this
+    exactly — the contract the continuous-batching machinery is tested
+    against."""
+    caches, states = transformer.init_caches(cfg, 1, max_seq)
+    toks_in = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, caches, states = M.prefill_with_cache(
+        params, toks_in, caches, states, cfg=cfg, chunk=chunk)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    while len(out) < max_new:
+        logits, caches, states = M.decode_step(
+            params, caches, states, jnp.asarray([out[-1]], jnp.int32),
+            jnp.int32(pos), cfg=cfg, chunk=chunk)
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out

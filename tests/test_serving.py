@@ -1,0 +1,243 @@
+"""Serving-tier parity + elasticity suite.
+
+The two kv_pool regressions this pins down:
+
+* the first generated token must be the argmax of the prefill's final
+  logits — the old admission path discarded them and re-fed the last
+  prompt token at an already-advanced position (double-feed), so every
+  request's first token was wrong;
+* ``SlotPool.release`` must zero the slot's recurrent state — a recycled
+  slot used to leak the previous request's SSM/RWKV state into the next
+  occupant's first step.
+
+Both show up as engine-vs-``reference_decode`` mismatches, which is the
+suite's master contract: continuous batching, slot reuse, and mid-decode
+reconfiguration must all be token-invisible.
+"""
+
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import canon, get_config, reduced
+from repro.models import transformer
+from repro.serving import (Request, RequestSource, ServingConfig,
+                           ServingEngine, reference_decode)
+
+MAX_SEQ = 24
+ARCHS = ["qwen3-14b", "rwkv6-7b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def model(request):
+    cfg = reduced(get_config(canon(request.param)))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return request.param, cfg, params
+
+
+def _prompts(cfg, n, length=4, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, length) for _ in range(n)]
+
+
+def _run(eng, reqs, cap=200, reconfigure=None):
+    for r in reqs:
+        eng.submit(r)
+    done = []
+    while len(done) < len(reqs) and eng.steps < cap:
+        done += eng.tick()
+        if reconfigure is not None and eng.steps == 2:
+            reconfigure()
+    assert len(done) == len(reqs)
+    return done
+
+
+# ------------------------------------------------------- decode parity --
+
+def test_engine_matches_reference(model):
+    """Continuous batching is token-invisible — including the FIRST output
+    token (the double-feed regression: re-feeding prompt[-1] at an
+    advanced position shifts every request's token 0)."""
+    _, cfg, params = model
+    eng = ServingEngine(cfg, params, n_slots=4, max_seq=MAX_SEQ,
+                        n_instances=2)
+    reqs = [Request(uid=i, prompt=p, max_new=4)
+            for i, p in enumerate(_prompts(cfg, 3))]
+    for r in _run(eng, reqs):
+        assert list(r.out) == reference_decode(cfg, params, r.prompt,
+                                               r.max_new, MAX_SEQ), r.uid
+
+
+def test_slot_reuse_no_state_leak(model):
+    """A recycled slot must behave like a fresh one: with one slot, the
+    second request decodes through the slot the first just vacated — any
+    leaked recurrent state (the release() regression) shifts its tokens
+    on the recurrent archs."""
+    _, cfg, params = model
+    eng = ServingEngine(cfg, params, n_slots=1, max_seq=MAX_SEQ,
+                        n_instances=1)
+    pa, pb = _prompts(cfg, 2, seed=5)
+    (ra,) = _run(eng, [Request(uid=0, prompt=pa, max_new=5)])
+    assert ra.slot == 0
+    (rb,) = _run(eng, [Request(uid=1, prompt=pb, max_new=5)])
+    assert rb.slot == 0            # same physical slot, reused
+    assert list(rb.out) == reference_decode(cfg, params, pb, 5, MAX_SEQ)
+
+
+def test_release_zeroes_slot(model):
+    """After release, the freed slot's caches AND recurrent states are
+    bit-identical to a fresh pool's."""
+    _, cfg, params = model
+    eng = ServingEngine(cfg, params, n_slots=2, max_seq=MAX_SEQ,
+                        n_instances=1)
+    _run(eng, [Request(uid=0, prompt=_prompts(cfg, 1)[0], max_new=3)])
+    assert sorted(eng.pool.free) == [0, 1]
+    for leaf in jax.tree.leaves((eng.pool.caches, eng.pool.states)):
+        assert not np.asarray(leaf).any()
+
+
+# ---------------------------------------------------------- elasticity --
+
+def test_reconfigure_vsn_mid_decode_invariance(model):
+    """The f_mu rewrite mid-decode changes no output token and moves no
+    KV bytes."""
+    _, cfg, params = model
+    eng = ServingEngine(cfg, params, n_slots=4, max_seq=MAX_SEQ,
+                        n_instances=4)
+    eng.pool.reconfigure_vsn(1)
+    rec = {}
+
+    def scale_up():
+        rec["moved"], _ = eng.reconfigure(4, mode="vsn")
+
+    reqs = [Request(uid=i, prompt=p, max_new=5)
+            for i, p in enumerate(_prompts(cfg, 4, seed=2))]
+    for r in _run(eng, reqs, reconfigure=scale_up):
+        assert list(r.out) == reference_decode(cfg, params, r.prompt,
+                                               r.max_new, MAX_SEQ), r.uid
+    assert rec["moved"] == 0
+    assert eng.pool.n_active == 4 and eng.pool.kv_bytes_moved == 0
+
+
+def test_sn_moves_bytes_vsn_does_not():
+    """The SN baseline ships the occupied moved slots' KV (free slots are
+    skipped by the accounting); VSN moves nothing for the same switch."""
+    cfg = reduced(get_config(canon("qwen3-14b")))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, n_slots=4, max_seq=MAX_SEQ,
+                        n_instances=4)
+    eng.pool.reconfigure_vsn(1)
+    # occupy two slots, leave two free
+    for i, p in enumerate(_prompts(cfg, 2, seed=3)):
+        eng.submit(Request(uid=i, prompt=p, max_new=8))
+    eng.tick()
+    occupied = eng.pool.occupied()
+    assert len(occupied) == 2
+    old = eng.pool.fmu.copy()
+    moved, _ = eng.reconfigure(4, mode="sn")
+    should_move = [s for s in occupied if old[s] != eng.pool.fmu[s]]
+    assert moved == len(should_move) * eng.pool.slot_bytes() > 0
+    assert eng.pool.kv_bytes_moved == moved
+
+    eng2 = ServingEngine(cfg, params, n_slots=4, max_seq=MAX_SEQ,
+                         n_instances=4)
+    eng2.pool.reconfigure_vsn(1)
+    moved2, _ = eng2.reconfigure(4, mode="vsn")
+    assert moved2 == 0 and eng2.pool.kv_bytes_moved == 0
+
+
+# ------------------------------------------------------- stream runtime --
+
+def _serving_stack(*, ingest_hosts=0, controller="none", ticks=6,
+                   slo_target_ms=50.0, obs=None, seed=11):
+    from repro.api import RuntimeConfig, build_runtime
+    from repro.io.sources import RateSchedule
+    scfg = ServingConfig(arch="qwen3-14b", reduced=True, n_slots=4,
+                         max_seq=MAX_SEQ, n_instances=4)
+    cfg = RuntimeConfig(serving=scfg, n_sources=2,
+                        ingest_hosts=ingest_hosts, n_active=1,
+                        controller=controller,
+                        slo_target_p99_ms=slo_target_ms,
+                        obs=obs or {})
+    src = RequestSource(schedule=RateSchedule([(0, 60.0)]), ticks=ticks,
+                        lanes=2, prompt_len=4, max_new=4, seed=seed,
+                        n_inputs=2, k_virt=4, tick_ms=50,
+                        drain_ticks=ticks * 2 * 4 // 4 + 12)
+    return build_runtime(cfg, src), src
+
+
+def test_async_stream_parity():
+    """Requests through the full async stack (tuple encode -> runtime ->
+    admission -> batched decode) come out token-identical to the
+    straight-line reference."""
+    rt, src = _serving_stack()
+    rt.run()
+    pipe = rt.pipeline
+    assert len(pipe.finished) == src.total_requests > 0
+    cfg, params = pipe.engine.cfg, pipe.engine.params
+    for r in pipe.finished:
+        assert list(r.out) == reference_decode(cfg, params, r.prompt,
+                                               r.max_new, MAX_SEQ), r.uid
+
+
+def test_ingest_tier_parity():
+    """The same request stream through the 2-host hierarchical ingest tier
+    serves every request with per-uid outputs identical to the tierless
+    run (heartbeat lanes keep the watermark frontier moving)."""
+    rt0, src0 = _serving_stack(seed=13)
+    rt0.run()
+    want = {r.uid: list(r.out) for r in rt0.pipeline.finished}
+    rt, src = _serving_stack(ingest_hosts=2, seed=13)
+    rt.run()
+    got = {r.uid: list(r.out) for r in rt.pipeline.finished}
+    assert len(got) == src.total_requests == src0.total_requests
+    assert got == want
+
+
+def test_slo_breach_drives_scale_up():
+    """Closed loop: an unmeetably tight p99 decode target makes the SLO
+    engine breach and the controller provision replicas mid-run — visible
+    in the RunReport (breaches + committed switch) and in the pool."""
+    from repro import obs as _obs
+    prev = _obs.get()
+    try:
+        rt, src = _serving_stack(
+            controller="slo", ticks=10, slo_target_ms=1e-3,
+            obs={"enabled": True, "trace": True,
+                 "slo_rules": [{"name": "decode_p99",
+                                "metric": "span.serve.decode",
+                                "threshold": 1e-6, "min_count": 4,
+                                "cooldown_s": 0.0}]})
+        rep = rt.run()
+    finally:
+        _obs.set_current(prev)
+    pipe = rt.pipeline
+    assert len(pipe.finished) == src.total_requests
+    assert rep.switches >= 1 and rep.reconfig_trace
+    assert pipe.reconfig_events and pipe.reconfig_events[0]["n_active"] > 1
+    assert pipe.reconfig_events[0]["kv_bytes_moved"] == 0
+    assert pipe.engine.pool.n_active > 1
+    assert rep.slo_breaches
+
+
+# --------------------------------------------------------------- config --
+
+def test_runtime_config_serving_roundtrip():
+    from repro.api import RuntimeConfig
+    cfg = RuntimeConfig(serving=ServingConfig(arch="rwkv6-7b", n_slots=2),
+                        controller="slo", slo_target_p99_ms=12.5)
+    d = json.loads(json.dumps(cfg.to_json()))
+    cfg2 = RuntimeConfig.from_json(d)
+    assert isinstance(cfg2.serving, ServingConfig)
+    assert cfg2.serving == cfg.serving
+    assert cfg2.slo_target_p99_ms == 12.5
+
+
+def test_serving_rejects_checkpointing(tmp_path):
+    from repro.api import RuntimeConfig, build_runtime
+    cfg = RuntimeConfig(serving=ServingConfig(), checkpoint_dir=str(tmp_path),
+                        checkpoint_every=4)
+    with pytest.raises(ValueError, match="checkpoint"):
+        build_runtime(cfg, [])
